@@ -1,0 +1,45 @@
+"""Tables 2/3: runtime overhead of the Bismarck fold vs the strawman NULL
+aggregate that sees the same tuples but computes nothing."""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import row, time_call
+from repro import tasks
+from repro.core import igd, uda
+from repro.data import synthetic
+
+RNG = jax.random.PRNGKey(0)
+
+
+def run(quick: bool = True):
+    n = 4096 if quick else 65536
+    rows = []
+    null_agg = uda.NullAggregate()
+
+    cases = [
+        ("forest_lr", tasks.LogisticRegression(dim=54),
+         synthetic.dense_classification(RNG, n, 54)),
+        ("forest_svm", tasks.SVM(dim=54),
+         synthetic.dense_classification(RNG, n, 54)),
+        ("dblife_lr", tasks.SparseLogisticRegression(dim=8192),
+         synthetic.sparse_classification(RNG, n, 8192, 16)),
+        ("movielens_lmf",
+         tasks.LowRankMF(n_rows=512, n_cols=256, rank=8, mu=1e-2),
+         synthetic.ratings(RNG, 512, 256, n, rank=4)),
+    ]
+    for name, task, data in cases:
+        agg = uda.IGDAggregate(task, igd.constant(0.05))
+        st = agg.initialize(RNG)
+        st_null = null_agg.initialize(RNG)
+        fold_t = jax.jit(lambda s, ex, a=agg: uda.fold(a, s, ex))
+        fold_n = jax.jit(lambda s, ex: uda.fold(null_agg, s, ex))
+        t_task = time_call(fold_t, st, data)
+        t_null = time_call(fold_n, st_null, data)
+        ovh = (t_task - t_null) / t_null * 100.0
+        rows.append(
+            row(f"overhead_{name}", t_task,
+                f"null_us={t_null*1e6:.1f};overhead_pct={ovh:.0f}")
+        )
+    return rows

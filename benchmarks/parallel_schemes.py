@@ -1,0 +1,58 @@
+"""Figure 9: parallelism schemes — (A) convergence per epoch of pure-UDA
+model averaging vs shared-memory Lock/AIG/NoLock; (B) per-epoch gradient
+throughput of the segmented (shared-nothing) fold vs worker count."""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import row, time_call
+from repro import tasks
+from repro.core import igd, ordering, parallel, uda
+from repro.data import synthetic
+
+RNG = jax.random.PRNGKey(0)
+
+
+def run(quick: bool = True):
+    n = 2048 if quick else 16384
+    dim = 32
+    data = synthetic.dense_classification(RNG, n, dim, clustered=False)
+    task = tasks.LogisticRegression(dim=dim)
+    step = igd.diminishing(0.3, decay=n)
+    rows = []
+
+    # (A) objective after fixed epochs per scheme
+    epochs = 3
+    agg = uda.IGDAggregate(task, step)
+    st0 = agg.initialize(RNG)
+    merged = st0
+    for _ in range(epochs):
+        merged = uda.segmented_fold(agg, merged, data, 8)
+    l_avg = float(task.full_loss(agg.terminate(merged), data))
+    rows.append(row("fig9a_pure_uda_8seg", 0.0, f"loss_after_{epochs}ep={l_avg:.4f}"))
+
+    for scheme in ("lock", "aig", "nolock"):
+        cfg = parallel.SharedMemoryConfig(scheme=scheme, workers=8)
+        _, losses = parallel.run_shared_memory(
+            task, step, data, rng=RNG, epochs=epochs, cfg=cfg,
+            loss_fn=task.full_loss, ordering=ordering.ShuffleOnce(),
+        )
+        rows.append(
+            row(f"fig9a_sharedmem_{scheme}", 0.0,
+                f"loss_after_{epochs}ep={losses[-1]:.4f}")
+        )
+
+    # (B) throughput scaling of the segmented fold (vmap workers)
+    st = agg.initialize(RNG)
+    t1 = time_call(jax.jit(lambda s, ex: uda.fold(agg, s, ex)), st, data)
+    for workers in (2, 4, 8):
+        tw = time_call(
+            jax.jit(lambda s, ex, w=workers: uda.segmented_fold(agg, s, ex, w)),
+            st, data,
+        )
+        rows.append(
+            row(f"fig9b_segmented_{workers}w", tw,
+                f"speedup_vs_serial={t1 / tw:.2f}x")
+        )
+    return rows

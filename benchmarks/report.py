@@ -1,0 +1,118 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline sections from the
+dry-run JSONL records (re-runnable; §Perf is maintained by hand as the
+hillclimb log).
+
+    PYTHONPATH=src:. python -m benchmarks.report [records.jsonl]
+"""
+
+from __future__ import annotations
+
+import sys
+
+from benchmarks.roofline import DEFAULT_PATH, analyze_record, load_records
+
+
+def _gb(x):
+    return f"{(x or 0)/2**30:.2f}"
+
+
+def dryrun_section(recs) -> str:
+    out = ["## §Dry-run", ""]
+    out.append(
+        "Every (architecture × input shape) cell lowered AND compiled with "
+        "`jax.jit(...).lower(...).compile()` on the production meshes — "
+        "single-pod `(data=16, model=16)` = 256 chips and multi-pod "
+        "`(pod=2, data=16, model=16)` = 512 chips — with pure "
+        "ShapeDtypeStruct inputs (no allocation). Per-device "
+        "`memory_analysis()` and compile times below; collective schedule "
+        "and cost analysis feed §Roofline."
+    )
+    out.append("")
+    out.append("| arch | shape | mesh | status | args GiB/dev | temp GiB/dev "
+               "| compile s | collectives (top kinds) |")
+    out.append("|---|---|---|---|---|---|---|---|")
+    for r in sorted(recs, key=lambda x: (x["arch"], x["shape"], x["mesh"])):
+        if r.get("status") == "SKIP":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | SKIP | — | — "
+                f"| — | {r.get('reason','')} |"
+            )
+            continue
+        if r.get("status") != "OK":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | FAIL | — | — "
+                f"| — | {r.get('error','')[:70]} |"
+            )
+            continue
+        kinds = r.get("collectives_by_kind", {})
+        top = sorted(kinds.items(), key=lambda kv: -kv[1]["bytes"])[:2]
+        ks = "; ".join(
+            f"{k}×{v['count']} ({v['bytes']/2**30:.1f} GiB)" for k, v in top
+        )
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | OK "
+            f"| {_gb(r.get('argument_bytes'))} | {_gb(r.get('temp_bytes'))} "
+            f"| {r.get('compile_s', 0):.0f} | {ks} |"
+        )
+    return "\n".join(out)
+
+
+def roofline_section(recs) -> str:
+    out = ["## §Roofline", ""]
+    out.append(
+        "Three-term roofline per cell (single-pod mesh), from the compiled "
+        "per-device HLO: `compute = dot_FLOPs / 197 TF/s`, `memory = "
+        "matmul-operand HBM bytes / 819 GB/s`, `collective = collective "
+        "traffic bytes / 50 GB/s-link` (1 link, conservative). All "
+        "quantities execution-weighted by while-loop trip counts "
+        "(`launch/hlo_analysis.py`); `cost_analysis()` alone undercounts "
+        "loop bodies by their trip count. Byte counts are bf16-PROJECTED: "
+        "the XLA CPU backend legalizes bf16→f32, so tensors produced by "
+        "bf16-touching fusions are counted at TPU width (2 B) — see "
+        "DESIGN.md §8. MODEL_FLOPS = 6·N_active·D "
+        "(train) / 2·N_active·D (prefill) / 2·N_active·B (decode); "
+        "MODEL/HLO is the useful-compute fraction (catches remat/dispatch/"
+        "padding waste); `MFU bound` = MODEL_FLOPS/chip / 197TF / "
+        "max(term)."
+    )
+    out.append("")
+    out.append("| arch | shape | compute s | memory s | collective s "
+               "| dominant | MODEL/HLO | MFU bound |")
+    out.append("|---|---|---|---|---|---|---|---|")
+    doms = {"compute": 0, "memory": 0, "collective": 0}
+    for r in sorted(recs, key=lambda x: (x["arch"], x["shape"])):
+        if r["mesh"] != "16x16":
+            continue
+        if r.get("status") == "SKIP":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | SKIP | — | — |")
+            continue
+        a = analyze_record(r)
+        if a is None:
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | FAIL | — | — |")
+            continue
+        doms[a["dominant"]] += 1
+        out.append(
+            f"| {a['arch']} | {a['shape']} | {a['compute_s']:.2f} "
+            f"| {a['memory_s']:.2f} | {a['collective_s']:.2f} "
+            f"| **{a['dominant']}** | {a['useful_flops_frac']:.2f} "
+            f"| {a['model_mfu_bound']:.2%} |"
+        )
+    out.append("")
+    out.append(
+        f"Dominant-term census (single-pod): {doms['collective']} cells "
+        f"collective-bound, {doms['memory']} memory-bound, "
+        f"{doms['compute']} compute-bound."
+    )
+    return "\n".join(out)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else DEFAULT_PATH
+    recs = load_records(path)
+    print(dryrun_section(recs))
+    print()
+    print(roofline_section(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""Roofline analysis: read the dry-run records (results/dryrun_baseline.jsonl
+or a given path), compute the three roofline terms per (arch x shape x mesh)
+and emit the table used by EXPERIMENTS.md §Roofline."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.launch import hlo_analysis as hlo
+
+DEFAULT_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "results", "dryrun_baseline.jsonl"
+)
+
+
+def load_records(path: str = DEFAULT_PATH):
+    recs = []
+    if not os.path.exists(path):
+        return recs
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                recs.append(json.loads(line))
+    # last record wins for duplicate (arch, shape, mesh)
+    dedup = {}
+    for r in recs:
+        dedup[(r["arch"], r["shape"], r["mesh"])] = r
+    return list(dedup.values())
+
+
+def analyze_record(r: dict):
+    if r.get("status") != "OK":
+        return None
+    n = r["n_chips"]
+    # all hlo_* quantities are PER-DEVICE (parsed from the per-device
+    # partitioned module) — no further division by chip count. Prefer the
+    # bf16-projected byte counts (TPU dtype widths; the CPU backend
+    # legalizes bf16 to f32 — see hlo_analysis docstring).
+    flops = r.get("hlo_flops") or 0.0
+    hbm = r.get("hlo_hbm_bytes_proj", r.get("hlo_hbm_bytes")) or 0.0
+    coll = r.get(
+        "collective_traffic_bytes_proj", r.get("collective_traffic_bytes")
+    ) or 0.0
+    terms = hlo.roofline_terms(flops, hbm, coll)
+    dom = hlo.dominant(terms)
+    model_f = r.get("model_flops") or 0.0
+    per_dev_model = model_f / n
+    util = per_dev_model / max(flops, 1.0)  # useful fraction of compiled compute
+    step_s = max(terms.values())
+    mfu = per_dev_model / hlo.PEAK_FLOPS / step_s if step_s > 0 else 0.0
+    return {
+        **r,
+        "compute_s": terms["compute_s"],
+        "memory_s": terms["memory_s"],
+        "collective_s": terms["collective_s"],
+        "dominant": dom,
+        "useful_flops_frac": util,
+        "roofline_step_s": step_s,
+        "model_mfu_bound": mfu,
+    }
+
+
+def table(path: str = DEFAULT_PATH, mesh: str = "16x16") -> str:
+    rows = []
+    hdr = ("| arch | shape | compute_s | memory_s | collective_s | dominant "
+           "| MODEL/HLO flops | roofline MFU bound |")
+    sep = "|---" * 8 + "|"
+    rows.append(hdr)
+    rows.append(sep)
+    for r in sorted(load_records(path),
+                    key=lambda x: (x["arch"], x["shape"])):
+        if r["mesh"] != mesh:
+            continue
+        if r.get("status") == "SKIP":
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | SKIP "
+                f"({r.get('reason','')}) | — | — |"
+            )
+            continue
+        a = analyze_record(r)
+        if a is None:
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | "
+                f"FAIL: {r.get('error','')[:60]} | — | — |"
+            )
+            continue
+        rows.append(
+            f"| {a['arch']} | {a['shape']} | {a['compute_s']:.3f} "
+            f"| {a['memory_s']:.3f} | {a['collective_s']:.3f} "
+            f"| {a['dominant']} | {a['useful_flops_frac']:.2f} "
+            f"| {a['model_mfu_bound']:.2%} |"
+        )
+    return "\n".join(rows)
+
+
+def run(quick: bool = True):
+    from benchmarks.common import row
+
+    recs = [analyze_record(r) for r in load_records()]
+    recs = [r for r in recs if r]
+    out = []
+    for a in sorted(recs, key=lambda x: (x["arch"], x["shape"], x["mesh"])):
+        out.append(
+            row(
+                f"roofline_{a['arch']}_{a['shape']}_{a['mesh']}",
+                a["roofline_step_s"],
+                f"dominant={a['dominant']};mfu_bound={a['model_mfu_bound']:.3f}",
+            )
+        )
+    if not out:
+        out.append(row("roofline_no_records", 0.0,
+                       "run repro.launch.dryrun first"))
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "16x16"
+    print(table(mesh=mesh))

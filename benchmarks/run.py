@@ -1,0 +1,58 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. ``--full`` uses paper-scale sizes;
+the default is container-sized. Individual suites: ``--only fig7``."""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    quick = not args.full
+
+    from benchmarks import (
+        catx,
+        mrs_bench,
+        ordering_bench,
+        overhead,
+        parallel_schemes,
+        roofline,
+        scalability,
+        tasks_runtime,
+    )
+
+    suites = {
+        "catx": catx,  # Fig 5 / Appendix C
+        "overhead": overhead,  # Tables 2/3
+        "fig7": tasks_runtime,  # Fig 7(A)(B)
+        "fig8": ordering_bench,  # Fig 8
+        "fig9": parallel_schemes,  # Fig 9
+        "fig10": mrs_bench,  # Fig 10
+        "table4": scalability,  # Table 4
+        "roofline": roofline,  # framework roofline (§Roofline)
+    }
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, mod in suites.items():
+        if args.only and args.only != name:
+            continue
+        try:
+            for line in mod.run(quick=quick):
+                print(line)
+        except Exception as e:  # noqa: BLE001
+            failed += 1
+            print(f"{name}_FAILED,0,{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(f"{failed} suites failed")
+
+
+if __name__ == "__main__":
+    main()

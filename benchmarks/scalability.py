@@ -1,0 +1,34 @@
+"""Table 4: scalability — per-epoch fold time as the dataset grows
+(linear-in-N is the IGD contract the paper leans on)."""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import row, time_call
+from repro import tasks
+from repro.core import igd, uda
+from repro.data import synthetic
+
+RNG = jax.random.PRNGKey(0)
+
+
+def run(quick: bool = True):
+    dim = 50  # Classify300M-like rows
+    task = tasks.LogisticRegression(dim=dim)
+    agg = uda.IGDAggregate(task, igd.constant(0.05))
+    rows = []
+    base = None
+    sizes = (4096, 8192, 16384) if quick else (65536, 131072, 262144)
+    for n in sizes:
+        data = synthetic.dense_classification(RNG, n, dim)
+        st = agg.initialize(RNG)
+        t = time_call(jax.jit(lambda s, ex: uda.fold(agg, s, ex)), st, data)
+        if base is None:
+            base = (n, t)
+        scale = (t / base[1]) / (n / base[0])
+        rows.append(
+            row(f"table4_lr_n{n}", t,
+                f"tuples_per_s={n / t:.0f};scaling_vs_linear={scale:.2f}")
+        )
+    return rows

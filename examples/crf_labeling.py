@@ -1,0 +1,38 @@
+"""Next-generation task (paper Fig. 7B): linear-chain CRF text labeling —
+not supported by any native in-RDBMS tool, ~30 lines of task code here.
+
+    PYTHONPATH=src python examples/crf_labeling.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro import tasks
+from repro.core import igd, ordering, uda
+from repro.data import synthetic
+
+
+def main():
+    rng = jax.random.PRNGKey(0)
+    data = synthetic.tagged_sequences(rng, 256, 24, n_labels=7, feat_dim=16)
+    task = tasks.LinearChainCRF(n_labels=7, feat_dim=16)
+    agg = uda.IGDAggregate(task, igd.diminishing(0.3, decay=1024))
+    res = uda.run_igd(
+        agg, data, rng=rng, epochs=10,
+        ordering=ordering.ShuffleOnce(), loss_fn=task.full_loss,
+    )
+    print(f"CRF NLL: {res.losses[0]:.1f} -> {res.losses[-1]:.1f}")
+
+    # Viterbi-decode a few held-out style sentences
+    correct = total = 0
+    for i in range(16):
+        ex = jax.tree.map(lambda x: x[i], data)
+        path = task.decode(res.model, ex)
+        correct += int(jnp.sum(path == ex["y"]))
+        total += int(ex["y"].shape[0])
+    print(f"token accuracy (decode): {correct/total:.3f} "
+          f"(chance = {1/7:.3f})")
+
+
+if __name__ == "__main__":
+    main()

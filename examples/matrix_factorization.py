@@ -1,0 +1,42 @@
+"""Recommendation via low-rank matrix factorization (paper Fig. 1B) — the
+task that is orders of magnitude faster under IGD than the native tools.
+
+    PYTHONPATH=src python examples/matrix_factorization.py
+"""
+
+import time
+
+import jax
+
+from repro import tasks
+from repro.core import igd, ordering, uda
+from repro.data import synthetic
+from repro.tasks import baselines
+
+
+def main():
+    rng = jax.random.PRNGKey(0)
+    n_rows, n_cols, n_ratings, rank = 512, 256, 65536, 8
+    ratings = synthetic.ratings(rng, n_rows, n_cols, n_ratings, rank=4)
+
+    task = tasks.LowRankMF(n_rows=n_rows, n_cols=n_cols, rank=rank, mu=1e-3)
+    agg = uda.IGDAggregate(task, igd.diminishing(0.05, decay=n_ratings))
+
+    t0 = time.perf_counter()
+    res = uda.run_igd(
+        agg, ratings, rng=rng, epochs=12,
+        ordering=ordering.ShuffleOnce(), loss_fn=task.full_loss,
+    )
+    t_igd = time.perf_counter() - t0
+    print(f"Bismarck IGD : loss {res.losses[0]:.1f} -> {res.losses[-1]:.1f} "
+          f"in {t_igd:.2f}s ({res.epochs} epochs)")
+
+    t0 = time.perf_counter()
+    m_als = baselines.als_lmf(ratings, n_rows, n_cols, rank, sweeps=8)
+    t_als = time.perf_counter() - t0
+    print(f"ALS baseline : loss {float(task.full_loss(m_als, ratings)):.1f} "
+          f"in {t_als:.2f}s (8 sweeps)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Hillclimb round 2: forced bf16 pre-gather casts (sharding-constrained),
+composed with the round-1 survivors."""
+
+import json
+import sys
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.dryrun import run_cell  # noqa: E402
+
+OUT = os.path.join(os.path.dirname(__file__), "hillclimb.jsonl")
+
+VARIANTS = [
+    # H-N5: round-1 bf16 refuted because XLA sank the convert past the
+    # gather; pin the bf16 copy to the shard layout => gathers move bf16.
+    ("nemotron-4-340b", "train_4k",
+     dict(seq_shard=True, cast_bf16=True, grad_accum=4), None, "N5-bf16pinned-ga4"),
+    # H-N6: if N5 halves gathered-weight temp too, try ga2 again within HBM
+    ("nemotron-4-340b", "train_4k",
+     dict(seq_shard=True, cast_bf16=True, grad_accum=2), None, "N6-bf16pinned-ga2"),
+    ("grok-1-314b", "train_4k",
+     dict(seq_shard=True, cast_bf16=True, grad_accum=4),
+     dict(moe_block=512, capacity_factor=1.0), "G5-bf16pinned"),
+    ("llama3.2-3b", "train_4k",
+     dict(seq_shard=True, cast_bf16=True, grad_accum=4), None, "L5-bf16pinned"),
+]
+
+
+def main():
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    with open(OUT, "a") as f:
+        for arch, shape, kw, overrides, tag in VARIANTS:
+            if only and only not in tag:
+                continue
+            try:
+                rec = run_cell(arch, shape, False, cfg_overrides=overrides,
+                               tag=tag, **kw)
+            except Exception as e:  # noqa: BLE001
+                rec = {"arch": arch, "shape": shape, "tag": tag,
+                       "status": "FAIL",
+                       "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-1500:]}
+            f.write(json.dumps(rec) + "\n")
+            f.flush()
+            print(tag, rec.get("status"),
+                  "coll", round((rec.get("collective_traffic_bytes") or 0) / 50e9, 1),
+                  "mem", round((rec.get("hlo_hbm_bytes") or 0) / 819e9, 1),
+                  "comp", round((rec.get("hlo_flops") or 0) / 197e12, 1),
+                  "temp_gb", round((rec.get("temp_bytes") or 0) / 2**30, 1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Hillclimb round 3: memory-feasibility attack for nemotron (bf16 master
+params + paper-faithful IGD microsteps) and the final compose for each
+pair."""
+
+import json
+import sys
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.dryrun import run_cell  # noqa: E402
+
+OUT = os.path.join(os.path.dirname(__file__), "hillclimb.jsonl")
+
+VARIANTS = [
+    # H-N7: param_dtype bf16 (master weights in bf16 — stochastic rounding
+    # on real HW) + igd_microsteps (no fp32 accumulation buffer): expect
+    # temp to drop toward HBM budget and mem term to halve.
+    ("nemotron-4-340b", "train_4k",
+     dict(seq_shard=True, grad_accum=4, igd_microsteps=True),
+     dict(param_dtype="bfloat16"), "N7-bf16params-igd"),
+    # H-N8: N7 at ga2 (fewer gather rounds) if memory allows.
+    ("nemotron-4-340b", "train_4k",
+     dict(seq_shard=True, grad_accum=2, igd_microsteps=True),
+     dict(param_dtype="bfloat16"), "N8-bf16params-ga2"),
+    # H-G6: G4 + igd_microsteps + bf16 params (same reasoning).
+    ("grok-1-314b", "train_4k",
+     dict(seq_shard=True, grad_accum=4, igd_microsteps=True),
+     dict(moe_block=512, capacity_factor=1.0, param_dtype="bfloat16"),
+     "G6-bf16params-igd"),
+    # H-L6: llama final compose: ga4 + igd microsteps + bf16 params.
+    ("llama3.2-3b", "train_4k",
+     dict(seq_shard=True, grad_accum=4, igd_microsteps=True),
+     dict(param_dtype="bfloat16"), "L6-bf16params-igd"),
+]
+
+
+def main():
+    with open(OUT, "a") as f:
+        for arch, shape, kw, overrides, tag in VARIANTS:
+            try:
+                rec = run_cell(arch, shape, False, cfg_overrides=overrides,
+                               tag=tag, **kw)
+            except Exception as e:  # noqa: BLE001
+                rec = {"arch": arch, "shape": shape, "tag": tag,
+                       "status": "FAIL",
+                       "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-1500:]}
+            f.write(json.dumps(rec) + "\n")
+            f.flush()
+            print(tag, rec.get("status"),
+                  "coll", round((rec.get("collective_traffic_bytes_proj") or 0) / 50e9, 1),
+                  "mem", round((rec.get("hlo_hbm_bytes_proj") or 0) / 819e9, 1),
+                  "comp", round((rec.get("hlo_flops") or 0) / 197e12, 1),
+                  "temp_gb", round((rec.get("temp_bytes") or 0) / 2**30, 1))
+
+
+if __name__ == "__main__":
+    main()

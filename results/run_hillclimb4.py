@@ -1,0 +1,34 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Hillclimb round 4: bf16-compressed gradient reductions (the remaining
+big f32 collective after weight gathers went bf16)."""
+import json, sys, traceback
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.launch.dryrun import run_cell
+
+OUT = os.path.join(os.path.dirname(__file__), "hillclimb.jsonl")
+VARIANTS = [
+    ("llama3.2-3b", "train_4k",
+     dict(seq_shard=True, grad_accum=4, compress_grads=True), None,
+     "L7-compress-grads"),
+    ("grok-1-314b", "train_4k",
+     dict(seq_shard=True, grad_accum=4, compress_grads=True),
+     dict(moe_block=512, capacity_factor=1.0), "G7-compress-grads"),
+    ("nemotron-4-340b", "train_4k",
+     dict(seq_shard=True, grad_accum=2, compress_grads=True), None,
+     "N9-compress-grads"),
+]
+with open(OUT, "a") as f:
+    for arch, shape, kw, overrides, tag in VARIANTS:
+        try:
+            rec = run_cell(arch, shape, False, cfg_overrides=overrides, tag=tag, **kw)
+        except Exception as e:
+            rec = {"arch": arch, "shape": shape, "tag": tag, "status": "FAIL",
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-1500:]}
+        f.write(json.dumps(rec) + "\n"); f.flush()
+        print(tag, rec.get("status"),
+              "coll", round((rec.get("collective_traffic_bytes_proj") or 0)/50e9, 1),
+              "mem", round((rec.get("hlo_hbm_bytes_proj") or 0)/819e9, 1),
+              "comp", round((rec.get("hlo_flops") or 0)/197e12, 1),
+              "temp_gb", round((rec.get("temp_bytes") or 0)/2**30, 1))

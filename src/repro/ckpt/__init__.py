@@ -1,0 +1,4 @@
+"""Checkpointing: atomic save/restore, keep-k retention, async writer,
+elastic re-sharding across mesh/device-count changes."""
+
+from repro.ckpt.checkpoint import CheckpointManager, restore, save  # noqa: F401

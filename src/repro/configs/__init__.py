@@ -1,0 +1,24 @@
+"""Architecture registry: one module per assigned architecture (exact dims
+from the assignment) plus the paper's own convex-task configs."""
+
+from repro.configs import (  # noqa: F401
+    grok_1_314b,
+    internvl2_2b,
+    llama3_2_3b,
+    minitron_4b,
+    musicgen_medium,
+    nemotron_4_340b,
+    paper_tasks,
+    qwen3_moe_235b_a22b,
+    starcoder2_7b,
+    xlstm_350m,
+    zamba2_2_7b,
+)
+from repro.configs.base import (  # noqa: F401
+    ArchConfig,
+    SHAPES,
+    ShapeConfig,
+    all_archs,
+    get_arch,
+    shape_applicable,
+)

@@ -1,0 +1,18 @@
+"""Bismarck core: the paper's primary contribution in JAX.
+
+The UDA abstraction (initialize/transition/merge/terminate), IGD step and
+proximal rules, data-ordering policies, parallelization schemes, and
+multiplexed reservoir sampling.
+"""
+
+from repro.core import convergence, igd, mrs, ordering, parallel, uda  # noqa: F401
+from repro.core.igd import StepSize, constant, diminishing, geometric  # noqa: F401
+from repro.core.uda import (  # noqa: F401
+    IGDAggregate,
+    IGDState,
+    NullAggregate,
+    UDA,
+    fold,
+    run_igd,
+    segmented_fold,
+)

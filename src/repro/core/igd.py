@@ -1,0 +1,151 @@
+"""Incremental gradient descent primitives: step-size rules and proximal ops.
+
+Paper, Section 2.2 (Eq. 2) and Appendices A/B:
+
+    w_{k+1} = Pi_{alpha P} ( w_k - alpha_k * grad f_{eta(k)}(w_k) )
+
+Step-size rules (Appendix B): constant, diminishing (divergent series) and
+geometric. Proximal operators (Appendix A): L1 soft-threshold, L2
+shrinkage, Euclidean projections onto the L2 ball and the simplex.
+
+Everything here is a pure, jittable function.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Step-size rules (Appendix B)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StepSize:
+    """A step-size schedule alpha_k as a pure function of the step index k.
+
+    ``kind`` selects the rule; parameterized so a single jittable callable
+    covers all three of the paper's rules.
+    """
+
+    kind: str  # "constant" | "diminishing" | "geometric"
+    alpha0: float
+    # diminishing: alpha_k = alpha0 / (1 + k / decay)   (divergent series)
+    # geometric:   alpha_k = alpha0 * rho ** (k / decay) (decay = steps/epoch)
+    decay: float = 1.0
+    rho: float = 0.95
+
+    def __call__(self, k: Array) -> Array:
+        k = jnp.asarray(k, jnp.float32)
+        if self.kind == "constant":
+            return jnp.float32(self.alpha0)
+        if self.kind == "diminishing":
+            return self.alpha0 / (1.0 + k / self.decay)
+        if self.kind == "geometric":
+            return self.alpha0 * self.rho ** (k / self.decay)
+        raise ValueError(f"unknown step-size kind: {self.kind}")
+
+
+def constant(alpha0: float) -> StepSize:
+    return StepSize("constant", alpha0)
+
+
+def diminishing(alpha0: float, decay: float = 1.0) -> StepSize:
+    return StepSize("diminishing", alpha0, decay=decay)
+
+
+def geometric(alpha0: float, rho: float = 0.95, decay: float = 1.0) -> StepSize:
+    return StepSize("geometric", alpha0, decay=decay, rho=rho)
+
+
+# ---------------------------------------------------------------------------
+# Proximal operators (Appendix A)
+#
+#   Pi_{aP}(x) = argmin_w  0.5 ||x - w||^2 + a P(w)
+# ---------------------------------------------------------------------------
+
+
+def prox_l1(x: Array, t: Array) -> Array:
+    """Soft-thresholding: prox of t * ||x||_1."""
+    return jnp.sign(x) * jnp.maximum(jnp.abs(x) - t, 0.0)
+
+
+def prox_l2sq(x: Array, t: Array) -> Array:
+    """Prox of t/2 * ||x||_2^2  (ridge shrinkage)."""
+    return x / (1.0 + t)
+
+
+def project_l2_ball(x: Array, radius: float = 1.0) -> Array:
+    """Euclidean projection onto {w : ||w||_2 <= radius}."""
+    nrm = jnp.linalg.norm(x)
+    scale = jnp.minimum(1.0, radius / jnp.maximum(nrm, 1e-30))
+    return x * scale
+
+
+def project_simplex(x: Array) -> Array:
+    """Euclidean projection onto the probability simplex.
+
+    Sort-based algorithm (Held/Wolfe/Crowder), O(n log n), jittable. Used
+    by the portfolio-optimization task whose feasible set is the simplex.
+    """
+    n = x.shape[-1]
+    u = jnp.sort(x, axis=-1)[..., ::-1]
+    css = jnp.cumsum(u, axis=-1) - 1.0
+    idx = jnp.arange(1, n + 1, dtype=x.dtype)
+    cond = u - css / idx > 0
+    # rho = largest index where cond holds (cond is True on a prefix)
+    rho = jnp.sum(cond.astype(jnp.int32), axis=-1) - 1
+    theta = jnp.take_along_axis(css, rho[..., None], axis=-1) / (
+        rho[..., None].astype(x.dtype) + 1.0
+    )
+    return jnp.maximum(x - theta, 0.0)
+
+
+# A "prox rule" maps (model_pytree, alpha_k) -> model_pytree.
+ProxFn = Callable[[jax.Array, jax.Array], jax.Array]
+
+
+def identity_prox(w, t):
+    del t
+    return w
+
+
+def make_l1_prox(mu: float) -> Callable:
+    """Tree-wise prox for P(w) = mu * ||w||_1 (LR / SVM regularizer)."""
+
+    def prox(w, t):
+        return jax.tree.map(lambda a: prox_l1(a, t * mu), w)
+
+    return prox
+
+
+def make_l2_prox(mu: float) -> Callable:
+    """Tree-wise prox for P(w) = mu/2 * ||w||_F^2 (LMF regularizer)."""
+
+    def prox(w, t):
+        return jax.tree.map(lambda a: prox_l2sq(a, t * mu), w)
+
+    return prox
+
+
+def make_simplex_prox() -> Callable:
+    """Projection prox for simplex-constrained vectors (portfolio)."""
+
+    def prox(w, t):
+        del t
+        return jax.tree.map(project_simplex, w)
+
+    return prox
+
+
+def igd_step(w, grad, alpha, prox: Callable = identity_prox):
+    """One proximal IGD update (paper Eq. 3) on an arbitrary pytree model."""
+    new_w = jax.tree.map(lambda p, g: p - alpha * g, w, grad)
+    return prox(new_w, alpha)

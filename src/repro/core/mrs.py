@@ -1,0 +1,144 @@
+"""Multiplexed Reservoir Sampling (paper §3.4, Fig. 6).
+
+For data too large to shuffle even once, the paper multiplexes gradient
+steps over (a) the streamed data via reservoir displacement and (b) a
+buffer holding the previous epoch's reservoir:
+
+  * the **I/O worker** streams tuples, maintains a reservoir in buffer A,
+    and takes a gradient step on each *dropped* tuple (the displaced
+    reservoir entry, or the rejected incoming tuple);
+  * the **memory worker** concurrently cycles over buffer B (last epoch's
+    reservoir) taking gradient steps;
+  * buffers swap at epoch boundaries.
+
+On TPU the two "threads" become software pipelining: per streamed tuple we
+multiplex 1 I/O-worker step with ``ratio`` memory-worker steps inside one
+``lax.scan`` — identical update sequence, no shared-memory threads needed
+(DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MRSConfig:
+    buffer_size: int
+    # memory-worker steps per streamed tuple
+    ratio: int = 1
+
+
+def _buf_set(buf, slot, example):
+    return jax.tree.map(lambda b, e: b.at[slot].set(e), buf, example)
+
+
+def _buf_get(buf, slot):
+    return jax.tree.map(lambda b: b[slot], buf)
+
+
+def reservoir_step(buf, n_seen, example, key):
+    """One Vitter reservoir update. Returns (buf, dropped_example).
+
+    While filling (n_seen < B) the incoming tuple enters the reservoir and
+    is also the 'dropped' tuple used for the I/O worker's gradient step
+    (every tuple must contribute a step, as in the plain UDA)."""
+    b = jax.tree.leaves(buf)[0].shape[0]
+    s = jax.random.randint(key, (), 0, jnp.maximum(n_seen + 1, 1))
+    filling = n_seen < b
+    take = jnp.logical_or(filling, s < b)
+    slot = jnp.where(filling, jnp.minimum(n_seen, b - 1), jnp.minimum(s, b - 1))
+    displaced = _buf_get(buf, slot)
+    new_buf = jax.tree.map(
+        lambda bb, e, d: jnp.where(take, bb.at[slot].set(e), bb),
+        buf,
+        example,
+        jax.tree.map(lambda x: x, buf),
+    )
+    # dropped = displaced entry if we inserted (and weren't filling),
+    #           else the incoming tuple itself
+    dropped = jax.tree.map(
+        lambda e, d: jnp.where(jnp.logical_and(take, ~filling), d, e),
+        example,
+        displaced,
+    )
+    return new_buf, dropped
+
+
+def reservoir_sample(data, buffer_size: int, rng):
+    """Plain one-pass without-replacement sample (the Subsampling baseline)."""
+    n = jax.tree.leaves(data)[0].shape[0]
+
+    def body(carry, xs):
+        buf, seen = carry
+        ex, key = xs
+        buf, _ = reservoir_step(buf, seen, ex, key)
+        return (buf, seen + 1), None
+
+    buf0 = jax.tree.map(lambda x: jnp.zeros((buffer_size,) + x.shape[1:], x.dtype), data)
+    keys = jax.random.split(rng, n)
+    (buf, _), _ = jax.lax.scan(body, (buf0, jnp.int32(0)), (data, keys))
+    return buf
+
+
+def mrs_epoch(uda, state, stream, buf_a, buf_b, mem_active, cfg: MRSConfig, rng):
+    """One MRS epoch: scan the stream, multiplexing I/O and memory steps."""
+    b = cfg.buffer_size
+
+    def body(carry, xs):
+        st, buf, seen, mem_ptr = carry
+        ex, key = xs
+        buf, dropped = reservoir_step(buf, seen, ex, key)
+        st = uda.transition(st, dropped)  # I/O worker
+        for _ in range(cfg.ratio):  # memory worker
+            mem_ex = _buf_get(buf_b, mem_ptr)
+            st = jax.tree.map(
+                lambda new, old: jnp.where(mem_active, new, old),
+                uda.transition(st, mem_ex),
+                st,
+            )
+            mem_ptr = (mem_ptr + 1) % b
+        return (st, buf, seen + 1, mem_ptr), None
+
+    n = jax.tree.leaves(stream)[0].shape[0]
+    keys = jax.random.split(rng, n)
+    (state, buf_a, _, _), _ = jax.lax.scan(
+        body, (state, buf_a, jnp.int32(0), jnp.int32(0)), (stream, keys)
+    )
+    return state, buf_a
+
+
+def run_mrs(
+    uda,
+    data,
+    *,
+    rng,
+    epochs: int,
+    cfg: MRSConfig,
+    loss_fn=None,
+):
+    """Epoch loop with buffer swapping (Fig. 6). Data is streamed in its
+    stored (possibly clustered) order — the whole point of MRS is to avoid
+    any shuffle."""
+    state = uda.initialize(rng)
+    zero_buf = jax.tree.map(
+        lambda x: jnp.zeros((cfg.buffer_size,) + x.shape[1:], x.dtype), data
+    )
+    buf_a, buf_b = zero_buf, zero_buf
+    epoch_fn = jax.jit(
+        lambda st, ba, bb, act, key: mrs_epoch(uda, st, data, ba, bb, act, cfg, key)
+    )
+    losses = []
+    for epoch in range(1, epochs + 1):
+        rng, sub = jax.random.split(rng)
+        state, buf_a = epoch_fn(
+            state, buf_a, buf_b, jnp.bool_(epoch > 1), sub
+        )
+        buf_a, buf_b = buf_b, buf_a  # swap: memory worker gets fresh reservoir
+        if loss_fn is not None:
+            losses.append(float(loss_fn(uda.terminate(state), data)))
+    return uda.terminate(state), losses

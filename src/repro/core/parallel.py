@@ -1,0 +1,125 @@
+"""Parallel IGD schemes (paper §3.3) and their TPU adaptation.
+
+The paper studies two in-RDBMS parallelization mechanisms:
+
+* **Pure UDA (shared-nothing)** — partial models trained per data segment,
+  combined with ``merge`` (model averaging). Provided by
+  ``repro.core.uda.segmented_fold``; at scale it becomes merge-period-H
+  local SGD over the ``data`` mesh axis (see ``repro/launch/train.py``).
+
+* **Shared-memory UDA** — one model concurrently updated by many workers
+  with three concurrency schemes: ``Lock`` (model mutex), ``AIG``
+  (per-component CompareAndExchange; Niu et al.'s atomic variant) and
+  ``NoLock`` (Hogwild!). TPUs have no coherent shared memory with CAS, so
+  the *mechanism* does not transfer (DESIGN.md §5); here we implement a
+  faithful *statistical simulator* of the three interleavings — stale reads
+  of bounded staleness (window = #workers) and, for NoLock, lost component
+  updates — to reproduce the paper's Figure 9(A) convergence comparison.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from repro.core import igd as igd_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class SharedMemoryConfig:
+    scheme: str = "nolock"  # "lock" | "aig" | "nolock"
+    workers: int = 8
+    # Probability a component write is overwritten by a racing worker
+    # (NoLock only). Scaled by (workers-1)/workers so 1 worker == serial.
+    lost_update_rate: float = 0.05
+
+
+def hogwild_fold(task, step_size, state_model, examples, rng, cfg, prox=None):
+    """Simulate one epoch of shared-memory parallel IGD.
+
+    Carry: a ring buffer of the last ``workers`` model versions (flattened).
+    At step k a worker reads a stale model:
+      * lock   — staleness 0 (serial; the mutex serializes read+write),
+      * aig    — each *component* is read from a random version in the
+                 window (mixed-version reads; writes never lost),
+      * nolock — same mixed-version reads, and each component of the write
+                 is lost with probability ``lost_update_rate``.
+    The update is applied to the freshest model (hogwild writes to the live
+    shared buffer).
+    """
+    prox = prox or igd_lib.identity_prox
+    flat0, unravel = ravel_pytree(state_model)
+    d = flat0.shape[0]
+    p = cfg.workers
+    ring0 = jnp.tile(flat0[None, :], (p, 1))
+
+    def grad_flat(flat, ex):
+        g = task.example_grad(unravel(flat), ex)
+        return ravel_pytree(g)[0]
+
+    def body(carry, xs):
+        ring, ptr, k = carry
+        ex, key = xs
+        k_read, k_lost = jax.random.split(key)
+        fresh = ring[ptr]
+        if cfg.scheme == "lock":
+            read = fresh
+        else:
+            # mixed-version component reads within the staleness window
+            ver = jax.random.randint(k_read, (d,), 0, p)
+            idx = (ptr - ver) % p
+            read = ring[idx, jnp.arange(d)]
+        alpha = step_size(k)
+        g = grad_flat(read, ex)
+        upd = -alpha * g
+        if cfg.scheme == "nolock":
+            rate = cfg.lost_update_rate * (p - 1) / max(p, 1)
+            keep = jax.random.bernoulli(k_lost, 1.0 - rate, (d,))
+            upd = jnp.where(keep, upd, 0.0)
+        new = fresh + upd
+        new = ravel_pytree(prox(unravel(new), alpha))[0]
+        nptr = (ptr + 1) % p
+        ring2 = ring.at[nptr].set(new)
+        return (ring2, nptr, k + 1), None
+
+    n = jax.tree.leaves(examples)[0].shape[0]
+    keys = jax.random.split(rng, n)
+    (ring, ptr, _), _ = jax.lax.scan(
+        body, (ring0, jnp.int32(0), jnp.int32(0)), (examples, keys)
+    )
+    return unravel(ring[ptr])
+
+
+def run_shared_memory(
+    task,
+    step_size,
+    data,
+    *,
+    rng,
+    epochs: int,
+    cfg: SharedMemoryConfig,
+    loss_fn=None,
+    prox=None,
+    ordering=None,
+):
+    """Epoch loop around ``hogwild_fold`` (mirrors ``uda.run_igd``)."""
+    from repro.core import ordering as ordering_lib
+
+    ordering = ordering or ordering_lib.ShuffleOnce()
+    model = task.init_model(rng)
+    n = jax.tree.leaves(data)[0].shape[0]
+    perm_rng = jax.random.fold_in(rng, 7)
+    folder = jax.jit(
+        lambda m, ex, r: hogwild_fold(task, step_size, m, ex, r, cfg, prox)
+    )
+    losses = []
+    for epoch in range(1, epochs + 1):
+        examples, perm_rng = ordering.order(data, n, epoch, perm_rng)
+        perm_rng, sub = jax.random.split(perm_rng)
+        model = folder(model, examples, sub)
+        if loss_fn is not None:
+            losses.append(float(loss_fn(model, data)))
+    return model, losses

@@ -1,0 +1,247 @@
+"""The Bismarck UDA abstraction: initialize / transition / merge / terminate.
+
+Paper, Section 3.1. A User-Defined Aggregate is the systems abstraction for
+IGD: the state is the model (plus a step counter), the transition applies
+one incremental gradient step per tuple, merge combines partial states from
+shared-nothing workers (model averaging, Zinkevich et al.), and terminate
+finalizes the model.
+
+In JAX the "aggregate fold over the tuple stream" is ``jax.lax.scan`` over
+the leading axis of the example batch — a non-commutative aggregation with
+exactly the UDA's data-access pattern.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Generic, NamedTuple, Optional, TypeVar
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import igd as igd_lib
+
+State = TypeVar("State")
+Example = TypeVar("Example")
+
+
+class UDA(Generic[State, Example]):
+    """The four-function Bismarck contract (Fig. 3 of the paper)."""
+
+    def initialize(self, rng: jax.Array) -> State:
+        raise NotImplementedError
+
+    def transition(self, state: State, example: Example) -> State:
+        raise NotImplementedError
+
+    def merge(self, a: State, b: State) -> State:
+        raise NotImplementedError
+
+    def terminate(self, state: State) -> Any:
+        raise NotImplementedError
+
+
+class IGDState(NamedTuple):
+    """Aggregation context: the model plus meta data (paper §3.1)."""
+
+    model: Any  # pytree
+    step: jax.Array  # int32 — number of gradient steps taken
+    weight: jax.Array  # float32 — examples folded (for weighted merge)
+
+
+@dataclasses.dataclass(frozen=True)
+class IGDAggregate(UDA):
+    """IGD expressed as a UDA for an arbitrary analytics task.
+
+    ``task`` provides ``init_model(rng)`` and ``example_grad(model, ex)``
+    (defaulting to ``jax.grad`` of ``example_loss``); this class provides the
+    generic four functions. Per the paper, the only task-specific logic
+    lives inside the transition's gradient computation.
+    """
+
+    task: Any
+    step_size: igd_lib.StepSize
+    prox: Callable = igd_lib.identity_prox
+
+    def initialize(self, rng: jax.Array) -> IGDState:
+        model = self.task.init_model(rng)
+        return IGDState(model, jnp.int32(0), jnp.float32(0.0))
+
+    def transition(self, state: IGDState, example: Example) -> IGDState:
+        alpha = self.step_size(state.step)
+        grad = self.task.example_grad(state.model, example)
+        model = igd_lib.igd_step(state.model, grad, alpha, self.prox)
+        return IGDState(model, state.step + 1, state.weight + 1.0)
+
+    def merge(self, a: IGDState, b: IGDState) -> IGDState:
+        """Weighted model averaging — IGD is 'essentially algebraic' (§3.3)."""
+        tot = a.weight + b.weight
+        wa = jnp.where(tot > 0, a.weight / jnp.maximum(tot, 1e-30), 0.5)
+        wb = 1.0 - wa
+        model = jax.tree.map(lambda x, y: wa * x + wb * y, a.model, b.model)
+        return IGDState(model, jnp.maximum(a.step, b.step), tot)
+
+    def terminate(self, state: IGDState) -> Any:
+        return state.model
+
+
+class NullAggregate(UDA):
+    """The paper's strawman: sees every tuple, computes nothing (Tables 2/3).
+
+    Used to measure the engine's pure data-movement overhead. The state
+    folds a trivial checksum of each tuple so XLA cannot dead-code-eliminate
+    the tuple reads (it must still stream every example)."""
+
+    def initialize(self, rng):
+        del rng
+        return jnp.float32(0.0)
+
+    def transition(self, state, example):
+        leaf = jax.tree.leaves(example)[0]
+        return state + jnp.sum(leaf).astype(jnp.float32)
+
+    def merge(self, a, b):
+        return a + b
+
+    def terminate(self, state):
+        return state
+
+
+# ---------------------------------------------------------------------------
+# The fold engine
+# ---------------------------------------------------------------------------
+
+
+def fold(uda: UDA, state, examples, unroll: int = 1):
+    """Run ``transition`` over the leading axis of ``examples`` (one epoch's
+    aggregate). This is the SQL-aggregate data access pattern: one sequential
+    pass, state carried through."""
+
+    def body(s, ex):
+        return uda.transition(s, ex), None
+
+    state, _ = jax.lax.scan(body, state, examples, unroll=unroll)
+    return state
+
+
+def fold_jit(uda: UDA):
+    """A jitted fold with donated state (the aggregate runs in place)."""
+
+    @jax.jit
+    def run(state, examples):
+        return fold(uda, state, examples)
+
+    return run
+
+
+def segmented_fold(uda: UDA, state, examples, num_segments: int):
+    """Shared-nothing parallel aggregate (paper §3.3, 'Pure UDA Version').
+
+    Splits the stream into ``num_segments`` contiguous partitions, folds each
+    independently from the same incoming state (vmap = the parallel workers),
+    then ``merge``s the partial states pairwise. On a real mesh the vmap axis
+    is a data-parallel mesh axis; semantics are identical.
+    """
+    n = jax.tree.leaves(examples)[0].shape[0]
+    if n % num_segments:
+        raise ValueError(f"{n} examples not divisible by {num_segments} segments")
+    seg = jax.tree.map(
+        lambda x: x.reshape((num_segments, n // num_segments) + x.shape[1:]),
+        examples,
+    )
+    states = jax.vmap(lambda ex: fold(uda, state, ex))(seg)
+
+    # tree-reduce the partial states with merge
+    def merge_slice(ss, i, j):
+        a = jax.tree.map(lambda x: x[i], ss)
+        b = jax.tree.map(lambda x: x[j], ss)
+        return uda.merge(a, b)
+
+    merged = jax.tree.map(lambda x: x[0], states)
+    for i in range(1, num_segments):
+        merged = uda.merge(merged, jax.tree.map(lambda x, i=i: x[i], states))
+    return merged
+
+
+# ---------------------------------------------------------------------------
+# Epoch driver (Fig. 2: the loop around the aggregate)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RunResult:
+    model: Any
+    losses: list  # loss after each epoch
+    epochs: int
+    shuffle_seconds: float
+    gradient_seconds: float
+    converged: bool
+
+
+def run_igd(
+    uda: UDA,
+    data,
+    *,
+    rng: jax.Array,
+    epochs: int,
+    ordering=None,
+    loss_fn: Optional[Callable] = None,
+    stop=None,
+    num_segments: int = 1,
+    state=None,
+):
+    """The Bismarck outer loop: [reorder] -> aggregate -> loss -> converged?
+
+    ``ordering`` is a policy from ``repro.core.ordering`` (None = clustered,
+    i.e. the stream's stored order). ``loss_fn(model, data) -> scalar`` is
+    the piggybacked objective evaluation; ``stop`` a convergence rule from
+    ``repro.core.convergence``.
+    """
+    from repro.core import ordering as ordering_lib  # local import, no cycle
+
+    if ordering is None:
+        ordering = ordering_lib.Clustered()
+    if state is None:
+        state = uda.initialize(rng)
+
+    n = jax.tree.leaves(data)[0].shape[0]
+    perm_rng = jax.random.fold_in(rng, 0x5EED)
+
+    if num_segments == 1:
+        folder = jax.jit(lambda s, ex: fold(uda, s, ex))
+    else:
+        folder = jax.jit(
+            lambda s, ex: segmented_fold(uda, s, ex, num_segments)
+        )
+    loss_jit = jax.jit(loss_fn) if loss_fn is not None else None
+
+    losses = []
+    shuffle_s = 0.0
+    grad_s = 0.0
+    converged = False
+    epoch = 0
+    for epoch in range(1, epochs + 1):
+        t0 = time.perf_counter()
+        examples, perm_rng = ordering.order(data, n, epoch, perm_rng)
+        jax.block_until_ready(examples)
+        t1 = time.perf_counter()
+        state = folder(state, examples)
+        jax.block_until_ready(state)
+        t2 = time.perf_counter()
+        shuffle_s += t1 - t0
+        grad_s += t2 - t1
+        if loss_jit is not None:
+            losses.append(float(loss_jit(uda.terminate(state), data)))
+        if stop is not None and stop(losses, epoch):
+            converged = True
+            break
+
+    return RunResult(
+        model=uda.terminate(state),
+        losses=losses,
+        epochs=epoch,
+        shuffle_seconds=shuffle_s,
+        gradient_seconds=grad_s,
+        converged=converged,
+    )

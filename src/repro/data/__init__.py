@@ -1,0 +1,5 @@
+"""Data substrate: synthetic dataset generators (stand-ins for the paper's
+Forest / DBLife / MovieLens / CoNLL / Classify300M workloads) and the
+ordering-aware epoch pipeline."""
+
+from repro.data import synthetic  # noqa: F401

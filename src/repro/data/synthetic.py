@@ -1,0 +1,140 @@
+"""Synthetic dataset generators matching the paper's workload shapes.
+
+| paper dataset | generator             | shape                          |
+|---------------|-----------------------|--------------------------------|
+| Forest        | dense_classification  | dense features, binary labels  |
+| DBLife        | sparse_classification | padded (idx, val) sparse rows  |
+| MovieLens     | ratings               | (i, j, v) triples              |
+| CoNLL         | tagged_sequences      | (x, y, mask) sentences         |
+| Classify300M  | dense_classification  | size-scaled stream             |
+
+All generators return data *clustered by label* by default (positives
+first) — the RDBMS heap-order pathology the paper studies; apply an
+ordering policy to randomize."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_classification(
+    rng, n: int, dim: int, *, margin: float = 1.0, noise: float = 0.5, clustered=True
+):
+    """Linearly-separable-ish binary data; labels ±1. Clustered: +1 first."""
+    kw, kx, kn = jax.random.split(rng, 3)
+    w_true = jax.random.normal(kw, (dim,)) / jnp.sqrt(dim)
+    half = n // 2
+    y = jnp.concatenate([jnp.ones(half), -jnp.ones(n - half)]).astype(jnp.float32)
+    x = jax.random.normal(kx, (n, dim)) / jnp.sqrt(dim)
+    # push each point to its label's side of the separator
+    proj = x @ w_true
+    x = x + ((margin * y - proj) / jnp.sum(w_true**2))[:, None] * w_true[None, :]
+    x = x + noise * jax.random.normal(kn, (n, dim)) / jnp.sqrt(dim)
+    if not clustered:
+        perm = jax.random.permutation(jax.random.fold_in(rng, 1), n)
+        x, y = x[perm], y[perm]
+    return {"x": x.astype(jnp.float32), "y": y}
+
+
+def sparse_classification(
+    rng, n: int, dim: int, nnz: int, *, clustered=True
+):
+    """DBLife-like sparse rows: ``nnz`` active features per example, padded
+    format (idx, val); idx == -1 is padding."""
+    kw, ki, kv, kn = jax.random.split(rng, 4)
+    w_true = jax.random.normal(kw, (dim,))
+    half = n // 2
+    y = jnp.concatenate([jnp.ones(half), -jnp.ones(n - half)]).astype(jnp.float32)
+    idx = jax.random.randint(ki, (n, nnz), 0, dim)
+    val = jnp.abs(jax.random.normal(kv, (n, nnz))).astype(jnp.float32)
+    # correlate values with the label through w_true[idx]
+    sign = jnp.sign(w_true)[idx]
+    val = val * sign * y[:, None]
+    val = val + 0.3 * jax.random.normal(kn, (n, nnz))
+    if not clustered:
+        perm = jax.random.permutation(jax.random.fold_in(rng, 1), n)
+        idx, val, y = idx[perm], val[perm], y[perm]
+    return {"idx": idx.astype(jnp.int32), "val": val.astype(jnp.float32), "y": y}
+
+
+def ratings(rng, n_rows: int, n_cols: int, n_ratings: int, rank: int = 4):
+    """MovieLens-like (i, j, v) triples from a planted low-rank matrix.
+    Clustered order: sorted by row index (a realistic storage order)."""
+    kl, kr, ki, kj, kn = jax.random.split(rng, 5)
+    l_true = jax.random.normal(kl, (n_rows, rank)) / jnp.sqrt(rank)
+    r_true = jax.random.normal(kr, (n_cols, rank)) / jnp.sqrt(rank)
+    i = jax.random.randint(ki, (n_ratings,), 0, n_rows)
+    j = jax.random.randint(kj, (n_ratings,), 0, n_cols)
+    v = jnp.sum(l_true[i] * r_true[j], axis=-1) + 0.05 * jax.random.normal(
+        kn, (n_ratings,)
+    )
+    order = jnp.argsort(i)  # clustered by row
+    return {
+        "i": i[order].astype(jnp.int32),
+        "j": j[order].astype(jnp.int32),
+        "v": v[order].astype(jnp.float32),
+    }
+
+
+def tagged_sequences(
+    rng, n: int, seq_len: int, n_labels: int, feat_dim: int
+):
+    """CoNLL-like sentences: per-token features correlated with a planted
+    emission matrix plus a Markov label chain."""
+    ke, kt, k0, kx = jax.random.split(rng, 4)
+    e_true = jax.random.normal(ke, (n_labels, feat_dim))
+    t_logits = 2.0 * jax.random.normal(kt, (n_labels, n_labels))
+
+    def sample_chain(key):
+        k1, k2 = jax.random.split(key)
+        y0 = jax.random.randint(k1, (), 0, n_labels)
+
+        def step(y, k):
+            nxt = jax.random.categorical(k, t_logits[y])
+            return nxt, nxt
+
+        _, ys = jax.lax.scan(step, y0, jax.random.split(k2, seq_len - 1))
+        return jnp.concatenate([y0[None], ys])
+
+    ys = jax.vmap(sample_chain)(jax.random.split(k0, n))
+    noise = jax.random.normal(kx, (n, seq_len, feat_dim))
+    x = e_true[ys] + 0.8 * noise
+    mask = jnp.ones((n, seq_len), jnp.float32)
+    return {"x": x.astype(jnp.float32), "y": ys.astype(jnp.int32), "mask": mask}
+
+
+def kalman_series(rng, horizon: int, state_dim: int, obs_dim: int, c_seed: int = 0):
+    """Noisy observations of a planted linear dynamical system."""
+    from repro.tasks.kalman import KalmanFilterTask
+
+    task = KalmanFilterTask(horizon, state_dim, obs_dim, c_seed=c_seed)
+    c, a = task._mats()
+    kw, kn = jax.random.split(rng)
+
+    def step(w, k):
+        w2 = a @ w + 0.1 * jax.random.normal(k, (state_dim,))
+        return w2, w2
+
+    w0 = jax.random.normal(kw, (state_dim,))
+    _, ws = jax.lax.scan(step, w0, jax.random.split(kn, horizon))
+    ys = ws @ c.T + 0.05 * jax.random.normal(jax.random.fold_in(rng, 3), (horizon, obs_dim))
+    return {"t": jnp.arange(horizon, dtype=jnp.int32), "y": ys.astype(jnp.float32)}
+
+
+def returns(rng, n_periods: int, n_assets: int):
+    """Centered asset-return vectors with a planted covariance."""
+    kf, kl, kn = jax.random.split(rng, 3)
+    n_factors = max(2, n_assets // 4)
+    loadings = jax.random.normal(kl, (n_assets, n_factors)) / jnp.sqrt(n_factors)
+    factors = jax.random.normal(kf, (n_periods, n_factors))
+    r = factors @ loadings.T + 0.1 * jax.random.normal(kn, (n_periods, n_assets))
+    r = r - jnp.mean(r, axis=0, keepdims=True)
+    return {"r": r.astype(jnp.float32)}
+
+
+def token_stream(rng, n_docs: int, seq_len: int, vocab: int):
+    """Synthetic token batches for the LM substrate (Zipf-ish unigram)."""
+    logits = -1.2 * jnp.log1p(jnp.arange(vocab, dtype=jnp.float32))
+    toks = jax.random.categorical(rng, logits, shape=(n_docs, seq_len))
+    return {"tokens": toks.astype(jnp.int32)}

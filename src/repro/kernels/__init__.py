@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel package ships kernel.py (pl.pallas_call + BlockSpec VMEM
+tiling), ops.py (jit'd public wrapper with an interpret-mode switch for
+CPU) and ref.py (pure-jnp oracle used by the allclose test sweeps).
+
+  igd_fused/   the paper's hot loop — per-tuple IGD transition with the
+               model held in VMEM across example tiles
+  attention/   blockwise causal flash attention (train/prefill)
+  decode/      flash-decode over a KV cache with online softmax
+"""

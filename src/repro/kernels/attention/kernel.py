@@ -1,0 +1,93 @@
+"""Blockwise causal flash attention (train/prefill) — Pallas TPU.
+
+Standard online-softmax tiling re-thought for TPU VMEM/MXU:
+  * grid (batch*q_heads, S/BQ, S/BK), K innermost so the (m, l, acc)
+    running state stays in VMEM scratch across K blocks;
+  * q/k/v blocks are (BQ, hd)/(BK, hd) VMEM tiles, hd padded to 128 and
+    BQ=BK=128 so both MXU matmuls are 128-aligned;
+  * GQA without materializing repeated KV: the k/v BlockSpec index map
+    sends q-head h to kv-head h // (H/Kv);
+  * causal masking by absolute block indices; fully-masked K blocks are
+    skipped via ``pl.when`` (upper-triangular block pairs do no work).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BQ = 128
+BK = 128
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                 scale: float, n_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(ki <= qi)  # skip fully-masked (strictly future) K blocks
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # [BQ, hd]
+        k = k_ref[0].astype(jnp.float32)  # [BK, hd]
+        v = v_ref[0].astype(jnp.float32)
+        s = (q @ k.T) * scale  # [BQ, BK]
+        q_pos = qi * BQ + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 0)
+        k_pos = ki * BK + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + p @ v
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _fin():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, scale: float | None = None,
+                    interpret: bool = False):
+    """q: [BH, S, hd] (BH = batch*q_heads, flattened by ops.py),
+    k/v: [BKVH, S, hd]; causal. Caller guarantees S % 128 == 0 and
+    hd % 128 == 0 (ops.py pads). GQA: BH = G * BKVH and head g*Kv+j maps
+    to kv head j ... handled by the caller's flattening order."""
+    bh, s, hd = q.shape
+    bkv = k.shape[0]
+    groups = bh // bkv
+    if scale is None:
+        scale = 1.0 / (hd ** 0.5)
+    n_q = s // BQ
+    n_k = s // BK
+    kern = functools.partial(_attn_kernel, scale=scale, n_k=n_k)
+    return pl.pallas_call(
+        kern,
+        grid=(bh, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, BQ, hd), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, BK, hd), lambda h, i, j: (h // groups, j, 0)),
+            pl.BlockSpec((1, BK, hd), lambda h, i, j: (h // groups, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, BQ, hd), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((BQ,), jnp.float32),
+            pltpu.VMEM((BQ,), jnp.float32),
+            pltpu.VMEM((BQ, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

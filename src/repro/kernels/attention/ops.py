@@ -1,0 +1,42 @@
+"""Public wrapper: [B, S, H, hd] GQA causal attention via the flash kernel,
+with head-dim/seq padding and (B, H) flattening. interpret=True on CPU."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.attention import kernel as K
+from repro.kernels.attention import ref as R
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
+def mha(q, k, v, *, interpret=True, use_kernel=True):
+    """q: [B, S, H, hd]; k/v: [B, S, Kv, hd]; causal GQA attention.
+    Returns [B, S, H, hd]."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    scale = 1.0 / (hd ** 0.5)
+
+    # flatten to [B*H, S, hd] with kv head h//groups adjacency:
+    # q head index = b*H + h ; kv index = b*Kv + h//groups — satisfied by
+    # laying batch outermost in both.
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kv, s, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kv, s, hd)
+
+    if not use_kernel:
+        of = R.attention_ref(qf, kf, vf, scale=scale)
+        return of.reshape(b, h, s, hd).transpose(0, 2, 1, 3)
+
+    sp = (-s) % K.BQ
+    dp = (-hd) % 128
+    if sp or dp:
+        qf = jnp.pad(qf, ((0, 0), (0, sp), (0, dp)))
+        kf = jnp.pad(kf, ((0, 0), (0, sp), (0, dp)))
+        vf = jnp.pad(vf, ((0, 0), (0, sp), (0, dp)))
+    of = K.flash_attention(qf, kf, vf, scale=scale, interpret=interpret)
+    of = of[:, :s, :hd]
+    return of.reshape(b, h, s, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle: causal GQA attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, scale=None):
+    """q: [BH, S, hd]; k/v: [BKV, S, hd]; BH = groups * BKV with q head h
+    reading kv head h // groups. Causal."""
+    bh, s, hd = q.shape
+    bkv = k.shape[0]
+    groups = bh // bkv
+    if scale is None:
+        scale = 1.0 / (hd ** 0.5)
+    k = jnp.repeat(k, groups, axis=0)
+    v = jnp.repeat(v, groups, axis=0)
+    logits = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    logits = jnp.where(mask[None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", p, v.astype(jnp.float32)).astype(q.dtype)

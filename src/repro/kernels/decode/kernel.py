@@ -1,0 +1,99 @@
+"""Flash-decode kernel: one query token against a (long) KV cache.
+
+Decode attention is HBM-bandwidth bound — the cache is read once per token.
+The kernel streams (BK, hd) cache blocks through VMEM with an online
+softmax; the (m, l, acc) state lives in VMEM scratch across cache blocks.
+A ``length`` scalar masks the invalid cache tail (prefetched via scalar
+memory). On a length-sharded cache (DESIGN.md §4) each model shard runs
+this kernel over its slice and the partial (m, l, acc) are combined with a
+tiny all-reduce — see repro.dist.collectives.flash_decode_combine.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BK = 512
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                   m_scr, l_scr, acc_scr, *, scale: float, n_k: int):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[0]
+
+    @pl.when(ki * BK < length)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # [hd] (query token)
+        k = k_ref[0].astype(jnp.float32)  # [BK, hd]
+        v = v_ref[0].astype(jnp.float32)
+        s = (k @ q) * scale  # [BK]
+        pos = ki * BK + jax.lax.iota(jnp.int32, BK)
+        s = jnp.where(pos < length, s, NEG_INF)
+        m_prev = m_scr[0]
+        m_new = jnp.maximum(m_prev, jnp.max(s))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[0] = l_scr[0] * corr + jnp.sum(p)
+        acc_scr[...] = acc_scr[...] * corr + (p @ v)[None, :]
+        m_scr[0] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _fin():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[0], 1e-30)).astype(
+            o_ref.dtype
+        )[0]
+        m_ref[0] = m_scr[0]
+        l_ref[0] = l_scr[0]
+
+
+def flash_decode(q, k, v, length, *, scale=None, interpret: bool = False):
+    """q: [BH, hd]; k/v: [BKV, S, hd]; length: scalar int32 (valid cache
+    prefix). Returns (out [BH, hd], m [BH], l [BH]) — the softmax stats
+    allow cross-shard combination for a length-sharded cache."""
+    bh, hd = q.shape
+    bkv, s, _ = k.shape
+    groups = bh // bkv
+    if scale is None:
+        scale = 1.0 / (hd ** 0.5)
+    n_k = max(1, s // BK)
+    kern = functools.partial(_decode_kernel, scale=scale, n_k=n_k)
+    grid = (bh, n_k)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, hd), lambda h, j: (h, 0)),
+            pl.BlockSpec((1, BK, hd), lambda h, j: (h // groups, j, 0)),
+            pl.BlockSpec((1, BK, hd), lambda h, j: (h // groups, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, hd), lambda h, j: (h, 0)),
+            pl.BlockSpec((1,), lambda h, j: (h,)),
+            pl.BlockSpec((1,), lambda h, j: (h,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, hd), q.dtype),
+            jax.ShapeDtypeStruct((bh,), jnp.float32),
+            jax.ShapeDtypeStruct((bh,), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(jnp.asarray([length], jnp.int32), q, k, v)

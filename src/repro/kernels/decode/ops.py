@@ -1,0 +1,38 @@
+"""Public wrapper: batched GQA flash-decode over a KV cache."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode import kernel as K
+from repro.kernels.decode import ref as R
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
+def decode_attention(q, k_cache, v_cache, length, *, interpret=True,
+                     use_kernel=True):
+    """q: [B, H, hd] (one token per sequence); caches: [B, S, Kv, hd];
+    length: int32 scalar (shared valid prefix). Returns [B, H, hd]."""
+    b, h, hd = q.shape
+    _, s, kv, _ = k_cache.shape
+    scale = 1.0 / (hd ** 0.5)  # from the UNPADDED head dim
+    qf = q.reshape(b * h, hd)
+    kf = k_cache.transpose(0, 2, 1, 3).reshape(b * kv, s, hd)
+    vf = v_cache.transpose(0, 2, 1, 3).reshape(b * kv, s, hd)
+
+    if not use_kernel:
+        of, _, _ = R.decode_ref(qf, kf, vf, length, scale=scale)
+        return of.reshape(b, h, hd)
+
+    dp = (-hd) % 128
+    sp = (-s) % K.BK
+    if dp or sp:
+        qf = jnp.pad(qf, ((0, 0), (0, dp)))
+        kf = jnp.pad(kf, ((0, 0), (0, sp), (0, dp)))
+        vf = jnp.pad(vf, ((0, 0), (0, sp), (0, dp)))
+    of, _, _ = K.flash_decode(qf, kf, vf, length, scale=scale,
+                              interpret=interpret)
+    return of[:, :hd].reshape(b, h, hd)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for flash-decode."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_ref(q, k, v, length, *, scale=None):
+    """q: [BH, hd]; k/v: [BKV, S, hd]. Returns (out, m, l)."""
+    bh, hd = q.shape
+    bkv, s, _ = k.shape
+    groups = bh // bkv
+    if scale is None:
+        scale = 1.0 / (hd ** 0.5)
+    k = jnp.repeat(k, groups, axis=0).astype(jnp.float32)
+    v = jnp.repeat(v, groups, axis=0).astype(jnp.float32)
+    logits = jnp.einsum("hd,hkd->hk", q.astype(jnp.float32), k) * scale
+    pos = jnp.arange(s)
+    logits = jnp.where(pos[None, :] < length, logits, -1e30)
+    m = jnp.max(logits, axis=-1)
+    p = jnp.exp(logits - m[:, None])
+    l = jnp.sum(p, axis=-1)
+    out = jnp.einsum("hk,hkd->hd", p, v) / l[:, None]
+    return out.astype(q.dtype), m, l

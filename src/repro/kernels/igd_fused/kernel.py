@@ -1,0 +1,133 @@
+"""Fused IGD transition kernel — the paper's hot loop on TPU.
+
+Bismarck's transition is ``Dot_Product`` + scalar loss-gradient +
+``Scale_And_Add`` per tuple, with the model hot in cache while tuples
+stream from the buffer pool. The TPU adaptation (DESIGN.md §5):
+
+* the model ``w`` lives in a VMEM scratch buffer for the whole aggregate
+  (initialized from HBM at grid step 0, written back at the last step);
+* examples stream HBM->VMEM in (TILE, D) blocks via the BlockSpec grid;
+* the strictly-sequential per-tuple dependence runs inside the kernel as a
+  ``fori_loop`` of VPU vector ops (8x128 lanes; D padded to 128);
+* a ``minibatch`` variant instead computes the whole tile's margins with
+  one MXU matvec and applies the summed update — trading IGD purity for
+  MXU utilization (both have exact jnp oracles in ref.py).
+
+Losses: "lr" (logistic), "svm" (hinge), "lsq" (least squares).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+TILE = 256  # examples per VMEM block
+
+
+def _grad_scale(loss: str, margin, y):
+    """d loss / d (w.x) given margin = y * (w.x) (lr/svm) or w.x (lsq)."""
+    if loss == "lr":
+        return -y * jax.nn.sigmoid(-margin)
+    if loss == "svm":
+        return jnp.where(margin < 1.0, -y, 0.0)
+    if loss == "lsq":
+        return margin - y  # here margin = w.x
+    raise ValueError(loss)
+
+
+def _igd_kernel(x_ref, y_ref, alpha_ref, w0_ref, wout_ref, wscr, *, loss: str,
+                n_tiles: int):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        wscr[...] = w0_ref[...]
+
+    def body(i, _):
+        xi = x_ref[i, :]  # [D]
+        w = wscr[...]
+        wx = jnp.sum(w * xi)
+        yi = y_ref[i]
+        m = wx if loss == "lsq" else yi * wx
+        c = _grad_scale(loss, m, yi) * alpha_ref[i]
+        wscr[...] = w - c * xi  # Scale_And_Add
+        return 0
+
+    jax.lax.fori_loop(0, x_ref.shape[0], body, 0)
+
+    @pl.when(t == n_tiles - 1)
+    def _fin():
+        wout_ref[...] = wscr[...]
+
+
+def igd_fold(x, y, alpha, w0, *, loss: str = "lr", interpret: bool = False):
+    """Sequential IGD over all n examples. x: [N, D] f32 (N % TILE == 0,
+    D % 128 == 0), y/alpha: [N], w0: [D] -> final w [D]."""
+    n, d = x.shape
+    assert n % TILE == 0, f"N={n} not a multiple of {TILE}"
+    assert d % 128 == 0, f"D={d} not a multiple of 128"
+    n_tiles = n // TILE
+    kern = functools.partial(_igd_kernel, loss=loss, n_tiles=n_tiles)
+    return pl.pallas_call(
+        kern,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((TILE, d), lambda t: (t, 0)),
+            pl.BlockSpec((TILE,), lambda t: (t,)),
+            pl.BlockSpec((TILE,), lambda t: (t,)),
+            pl.BlockSpec((d,), lambda t: (0,)),
+        ],
+        out_specs=pl.BlockSpec((d,), lambda t: (0,)),
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((d,), jnp.float32)],
+        interpret=interpret,
+    )(x, y, alpha, w0)
+
+
+def _minibatch_kernel(x_ref, y_ref, alpha_ref, w0_ref, wout_ref, wscr, *,
+                      loss: str, n_tiles: int):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        wscr[...] = w0_ref[...]
+
+    w = wscr[...]
+    wx = x_ref[...] @ w  # [TILE] — one MXU matvec for the whole tile
+    y = y_ref[...]
+    m = wx if loss == "lsq" else y * wx
+    c = _grad_scale(loss, m, y) * alpha_ref[...]
+    upd = c @ x_ref[...]  # [D]
+    wscr[...] = w - upd / x_ref.shape[0]
+
+    @pl.when(t == n_tiles - 1)
+    def _fin():
+        wout_ref[...] = wscr[...]
+
+
+def igd_fold_minibatch(x, y, alpha, w0, *, loss: str = "lr",
+                       interpret: bool = False):
+    """Minibatch variant: one gradient step per TILE (mean gradient),
+    margins computed with an MXU matmul."""
+    n, d = x.shape
+    assert n % TILE == 0 and d % 128 == 0
+    n_tiles = n // TILE
+    kern = functools.partial(_minibatch_kernel, loss=loss, n_tiles=n_tiles)
+    return pl.pallas_call(
+        kern,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((TILE, d), lambda t: (t, 0)),
+            pl.BlockSpec((TILE,), lambda t: (t,)),
+            pl.BlockSpec((TILE,), lambda t: (t,)),
+            pl.BlockSpec((d,), lambda t: (0,)),
+        ],
+        out_specs=pl.BlockSpec((d,), lambda t: (0,)),
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((d,), jnp.float32)],
+        interpret=interpret,
+    )(x, y, alpha, w0)

@@ -1,0 +1,46 @@
+"""Public jit'd wrappers for the fused IGD kernels. On CPU (no TPU) the
+kernels run in interpret mode; pass interpret=False on real hardware."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.igd_fused import kernel as K
+from repro.kernels.igd_fused import ref as R
+
+
+def _pad(x, y, alpha, w0):
+    n, d = x.shape
+    dp = (-d) % 128
+    np_ = (-n) % K.TILE
+    if dp:
+        x = jnp.pad(x, ((0, 0), (0, dp)))
+        w0 = jnp.pad(w0, (0, dp))
+    if np_:
+        x = jnp.pad(x, ((0, np_), (0, 0)))
+        y = jnp.pad(y, (0, np_))
+        alpha = jnp.pad(alpha, (0, np_))  # alpha=0 -> padded rows are no-ops
+    return x, y, alpha, w0, d
+
+
+@functools.partial(jax.jit, static_argnames=("loss", "interpret", "use_kernel"))
+def igd_fold(x, y, alpha, w0, *, loss="lr", interpret=True, use_kernel=True):
+    """Bismarck transition fold over (x, y) with per-step sizes alpha."""
+    if not use_kernel:
+        return R.igd_fold_ref(x, y, alpha, w0, loss=loss)
+    xp, yp, ap, wp, d = _pad(x, y, alpha, w0)
+    out = K.igd_fold(xp, yp, ap, wp, loss=loss, interpret=interpret)
+    return out[:d]
+
+
+@functools.partial(jax.jit, static_argnames=("loss", "interpret", "use_kernel"))
+def igd_fold_minibatch(x, y, alpha, w0, *, loss="lr", interpret=True,
+                       use_kernel=True):
+    if not use_kernel:
+        return R.igd_fold_minibatch_ref(x, y, alpha, w0, loss=loss, tile=K.TILE)
+    xp, yp, ap, wp, d = _pad(x, y, alpha, w0)
+    out = K.igd_fold_minibatch(xp, yp, ap, wp, loss=loss, interpret=interpret)
+    return out[:d]

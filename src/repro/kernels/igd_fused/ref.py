@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for the fused IGD kernels."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _grad_scale(loss, margin, y):
+    if loss == "lr":
+        return -y * jax.nn.sigmoid(-margin)
+    if loss == "svm":
+        return jnp.where(margin < 1.0, -y, 0.0)
+    if loss == "lsq":
+        return margin - y
+    raise ValueError(loss)
+
+
+def igd_fold_ref(x, y, alpha, w0, *, loss: str = "lr"):
+    """Sequential per-example IGD via lax.scan (the UDA fold)."""
+
+    def body(w, ex):
+        xi, yi, ai = ex
+        wx = jnp.dot(w, xi)
+        m = wx if loss == "lsq" else yi * wx
+        c = _grad_scale(loss, m, yi) * ai
+        return w - c * xi, None
+
+    w, _ = jax.lax.scan(body, w0, (x, y, alpha))
+    return w
+
+
+def igd_fold_minibatch_ref(x, y, alpha, w0, *, loss: str = "lr", tile: int = 256):
+    """One mean-gradient step per tile."""
+    n, d = x.shape
+    xt = x.reshape(n // tile, tile, d)
+    yt = y.reshape(n // tile, tile)
+    at = alpha.reshape(n // tile, tile)
+
+    def body(w, ex):
+        xb, yb, ab = ex
+        wx = xb @ w
+        m = wx if loss == "lsq" else yb * wx
+        c = _grad_scale(loss, m, yb) * ab
+        return w - (c @ xb) / tile, None
+
+    w, _ = jax.lax.scan(body, w0, (xt, yt, at))
+    return w

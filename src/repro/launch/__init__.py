@@ -1,0 +1,2 @@
+"""Launcher: production mesh, input specs, train/serve step builders,
+multi-pod dry-run driver, and elastic checkpoint-resume entry points."""

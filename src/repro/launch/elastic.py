@@ -1,0 +1,58 @@
+"""Elastic scaling: resume a training run on a DIFFERENT device count /
+mesh than the one that wrote the checkpoint.
+
+Checkpoints store logical (unsharded) arrays (repro.ckpt), so elasticity
+is a placement decision at restore time:
+
+    params, opt, meta = elastic_restore(ckpt_dir, cfg, optimizer, new_mesh)
+
+re-derives the partition specs against the NEW mesh and `jax.device_put`s
+each leaf onto it. The data pipeline state in the checkpoint meta is mesh-
+independent (epoch/cursor/seed), so the token order is reproduced exactly;
+only the per-device batch slicing changes. Scale-up and scale-down are
+symmetric. Used by tests/test_elastic.py and the train_loop when a mesh is
+passed on resume.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+
+from repro.ckpt import CheckpointManager
+from repro.dist import sharding as shd
+from repro.models import lm
+
+
+def shardings_for(cfg, mesh, optimizer) -> Tuple[Any, Any]:
+    """(param shardings, opt-state shardings) for a config on a mesh."""
+    params_abs = jax.eval_shape(
+        functools.partial(lm.init_lm, cfg), jax.random.PRNGKey(0)
+    )
+    pspecs = shd.param_specs(params_abs, cfg, mesh)
+    pshard = shd.shardings(pspecs, mesh)
+    opt_abs = jax.eval_shape(optimizer.init, params_abs)
+    oshard = tuple(pshard for _ in opt_abs) if opt_abs else ()
+    return pshard, oshard
+
+
+def elastic_restore(ckpt_dir: str, cfg, optimizer, mesh: Optional[Any]):
+    """Restore the latest checkpoint in ``ckpt_dir`` re-sharded onto
+    ``mesh`` (None = single device). Returns (params, opt_state, meta) or
+    (None, None, None) when no checkpoint exists."""
+    mgr = CheckpointManager(ckpt_dir)
+    params_abs = jax.eval_shape(
+        functools.partial(lm.init_lm, cfg), jax.random.PRNGKey(0)
+    )
+    opt_abs = jax.eval_shape(optimizer.init, params_abs)
+    like = {"params": params_abs, "opt": opt_abs}
+    shardings = None
+    if mesh is not None:
+        pshard, oshard = shardings_for(cfg, mesh, optimizer)
+        shardings = {"params": pshard, "opt": oshard}
+    restored, meta = mgr.restore_latest(like, shardings=shardings)
+    if restored is None:
+        return None, None, None
+    return restored["params"], restored["opt"], meta

@@ -1,0 +1,418 @@
+"""Post-partitioning HLO analysis: execution-weighted FLOPs, HBM traffic
+and collective traffic for the roofline.
+
+Why not ``compiled.cost_analysis()`` alone: XLA's cost analysis counts each
+while-loop body ONCE, so anything under ``lax.scan`` (layers, microbatches)
+is undercounted by the trip count. We therefore parse ``compiled.as_text()``:
+
+* reconstruct the computation call graph; while bodies/conditions get an
+  execution multiplier equal to the loop trip count (recovered from the
+  largest integer constant in the loop condition);
+* FLOPs: every ``dot`` instruction contributes 2*prod(lhs)*prod(rhs_free),
+  weighted by its computation's multiplier (elementwise flops are ignored —
+  matmuls dominate every assigned architecture);
+* HBM bytes: the **matmul-operand traffic model** — for every executed dot,
+  lhs + rhs + output bytes (execution-weighted), plus collective outputs.
+  This assumes perfect fusion of elementwise chains into the surrounding
+  matmuls (what a tuned TPU program achieves) and correctly ignores
+  loop-carried buffer aliasing (naive instruction-output sums over-count
+  dynamic-update-slice carries by the trip count). The naive instruction
+  sum is still reported as ``hbm_upper_bytes`` (an upper bound);
+* collective traffic: operand/output sizes of all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute, execution-weighted.
+
+**bf16 projection.** The XLA *CPU* backend legalizes bf16 compute to f32
+(FloatNormalization inserts f32->bf16->f32 convert fusions), so every
+bf16 tensor in the model is measured at f32 width in the CPU-compiled
+HLO. The TPU target runs them in bf16. We therefore also report
+``*_proj`` quantities: any f32 tensor produced by a fusion whose body
+touches bf16 (the normalization signature) is counted at half width.
+Roofline tables use the projected numbers; raw CPU-width numbers are kept
+alongside.
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+import jax
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^=]*?\)|\S+))\s+([\w\-]+)\("
+)
+_CALL_RE = re.compile(
+    r"(to_apply|body|condition|calls|branch_computations|called_computations)="
+    r"(?:\{([^}]*)\}|%?([\w.\-]+))"
+)
+_CONST_RE = re.compile(r"[su]32\[\]\s+constant\((\d+)\)")
+_DIMS_RE = {
+    "lb": re.compile(r"lhs_batch_dims=\{([\d,]*)\}"),
+    "lc": re.compile(r"lhs_contracting_dims=\{([\d,]*)\}"),
+}
+
+_COLLECTIVE_KINDS = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+}
+
+# ops that produce no HBM traffic of their own (views / bookkeeping /
+# control flow whose bodies are accounted separately)
+_FREE_OPS = {
+    "get-tuple-element", "tuple", "parameter", "bitcast", "constant",
+    "after-all", "partition-id", "replica-id", "domain", "opt-barrier",
+    "while", "conditional", "call",
+}
+
+
+def _shape_dims(shape_str: str):
+    """First tensor's (dtype_bytes, dims) in a shape string."""
+    m = _SHAPE_RE.search(shape_str)
+    if not m or m.group(1) not in _DTYPE_BYTES:
+        return None
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return _DTYPE_BYTES[m.group(1)], dims
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes over every tensor in a (possibly tuple) shape string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        if m.group(1) not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[m.group(1)]
+    return total
+
+
+def _parse_int_list(s: str):
+    return [int(x) for x in s.split(",") if x]
+
+
+@dataclasses.dataclass
+class HloAnalysis:
+    flops: float  # execution-weighted dot flops (per device)
+    hbm_bytes: float  # matmul-operand HBM traffic model (per device)
+    hbm_bytes_proj: float  # same, bf16-projected (TPU dtype widths)
+    hbm_upper_bytes: float  # naive instruction-output sum (upper bound)
+    collective_operand_bytes: float
+    collective_traffic_bytes: float
+    collective_traffic_bytes_proj: float  # bf16-projected
+    collectives_by_kind: dict
+    dot_count: int
+    n_computations: int
+
+
+_PASSTHROUGH_OPS = {
+    "convert", "copy", "transpose", "reshape", "bitcast", "broadcast",
+    "all-gather", "all-gather-start", "slice", "dynamic-slice",
+    "get-tuple-element", "add", "multiply",
+}
+
+
+def analyze(hlo_text: str) -> HloAnalysis:
+    comps: dict = {}
+    entries = []
+    cur = None
+    for line in hlo_text.splitlines():
+        if line.startswith("%") or line.startswith("ENTRY"):
+            name = line.split("(", 1)[0].strip()
+            is_entry = name.startswith("ENTRY")
+            if is_entry:
+                name = name[len("ENTRY"):].strip()
+            name = name.lstrip("%")
+            if not name:
+                continue
+            cur = name
+            comps[cur] = {
+                "shapes": {},  # instr name -> (dtype_bytes, dims)
+                "instrs": {},  # instr name -> (op, arg0, callee)
+                "dots": [],
+                "colls": [],  # (kind, out_bytes, arg0)
+                "out_bytes": 0,  # sum of instruction output bytes
+                "calls": [],  # (kind, callee)
+                "whiles": [],  # (cond, body)
+                "consts": [],
+                "bf16": False,  # body mentions a bf16 tensor
+            }
+            if is_entry:
+                entries.append(cur)
+            continue
+        if cur is None or not line.startswith(" "):
+            continue
+        c = comps[cur]
+        if "bf16[" in line:
+            c["bf16"] = True
+        for m in _CONST_RE.finditer(line):
+            c["consts"].append(int(m.group(1)))
+        callee_here = None
+        for m in _CALL_RE.finditer(line):
+            kind = m.group(1)
+            blob = m.group(2) if m.group(2) is not None else m.group(3)
+            for callee in blob.split(","):
+                callee = callee.strip().lstrip("%")
+                if callee:
+                    c["calls"].append((kind, callee))
+                    if kind in ("calls", "to_apply") and callee_here is None:
+                        callee_here = callee
+        im = _INSTR_RE.match(line)
+        if im:
+            iname, shape_str, op = im.group(1), im.group(2), im.group(3)
+            sd = _shape_dims(shape_str)
+            if sd:
+                c["shapes"][iname] = sd
+            args = line[im.end():]
+            a0 = re.match(r"\s*%?([\w.\-]+)", args)
+            c["instrs"][iname] = (
+                op, a0.group(1) if a0 else None, callee_here
+            )
+            if op not in _FREE_OPS:
+                c["out_bytes"] += _shape_bytes(shape_str)
+            if op == "dot":
+                ops_m = re.match(r"\s*%?([\w.\-]+),\s*%?([\w.\-]+)\)", args)
+                lb = _DIMS_RE["lb"].search(line)
+                lc = _DIMS_RE["lc"].search(line)
+                c["dots"].append(
+                    (
+                        ops_m.group(1) if ops_m else None,
+                        ops_m.group(2) if ops_m else None,
+                        _parse_int_list(lb.group(1)) if lb else [],
+                        _parse_int_list(lc.group(1)) if lc else [],
+                        shape_str,
+                    )
+                )
+            elif op.replace("-start", "") in _COLLECTIVE_KINDS:
+                c["colls"].append(
+                    (
+                        op.replace("-start", ""),
+                        _shape_bytes(shape_str),
+                        a0.group(1) if a0 else None,
+                        (sd or (4, []))[0],  # output dtype width
+                    )
+                )
+        wm = re.search(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)", line)
+        if wm:
+            c["whiles"].append((wm.group(1), wm.group(2)))
+
+    # ---- bf16 projection: is this (possibly f32-legalized) tensor bf16
+    # on the TPU target? -------------------------------------------------
+    def bf16ish(comp, iname, depth=0):
+        if iname is None or depth > 12:
+            return False
+        info = comp["instrs"].get(iname)
+        sd = comp["shapes"].get(iname)
+        if sd and sd[0] == 2:  # already bf16/f16
+            return True
+        if info is None:
+            return False
+        op, arg0, callee = info
+        if op == "fusion" and callee and comps.get(callee, {}).get("bf16"):
+            return True
+        if op in _PASSTHROUGH_OPS:
+            return bf16ish(comp, arg0, depth + 1)
+        return False
+
+    def proj_bytes(comp, iname, raw):
+        if iname is not None and bf16ish(comp, iname):
+            sd = comp["shapes"].get(iname)
+            if sd and sd[0] == 4:  # f32-legalized bf16
+                return raw // 2
+        return raw
+
+    if not entries:
+        called = {cl for v in comps.values() for _, cl in v["calls"]}
+        entries = [n for n in comps if n not in called]
+
+    # ---- execution multipliers + control/fusion classification --------
+    mult = defaultdict(int)
+    control = set(entries)
+
+    def trip_count(cond_name: str) -> int:
+        c = comps.get(cond_name)
+        if not c or not c["consts"]:
+            return 1
+        return max(1, max(c["consts"]))
+
+    def visit(name: str, factor: int, depth=0):
+        if name not in comps or depth > 60 or factor <= 0:
+            return
+        mult[name] += factor
+        c = comps[name]
+        body_mult = {}
+        for cond, body in c["whiles"]:
+            tc = trip_count(cond)
+            body_mult[body] = tc
+            body_mult[cond] = tc
+        for kind, callee in c["calls"]:
+            if kind in ("body", "condition", "branch_computations"):
+                control.add(callee)
+            visit(callee, factor * body_mult.get(callee, 1), depth + 1)
+
+    for e in entries:
+        visit(e, 1)
+
+    # ---- aggregate -----------------------------------------------------
+    flops = 0.0
+    dot_count = 0
+    hbm = 0.0
+    hbm_proj = 0.0
+    hbm_upper = 0.0
+    by_kind: dict = defaultdict(lambda: [0, 0])
+    operand_total = 0.0
+    traffic_total = 0.0
+    traffic_proj = 0.0
+
+    def _bytes_of(sd):
+        if sd is None:
+            return 0
+        db, dims = sd
+        n = db
+        for d in dims:
+            n *= d
+        return n
+
+    for name, c in comps.items():
+        f = mult.get(name, 0)
+        if f == 0:
+            continue
+        for lhs, rhs, batch_dims, contract_dims, out_shape in c["dots"]:
+            sd_l = c["shapes"].get(lhs)
+            sd_r = c["shapes"].get(rhs)
+            sd_o = _shape_dims(out_shape)
+            if sd_l is None or sd_r is None:
+                # fall back: flops = 2 * out_elems (min estimate)
+                if sd_o:
+                    n = 1
+                    for d in sd_o[1]:
+                        n *= d
+                    flops += f * 2.0 * n
+                hbm += f * 3.0 * _bytes_of(sd_o)
+                hbm_proj += f * 3.0 * _bytes_of(sd_o) / 2.0
+                continue
+            _, ldims = sd_l
+            _, rdims = sd_r
+            lprod = 1
+            for d in ldims:
+                lprod *= d
+            shared = 1
+            for i in batch_dims + contract_dims:
+                if i < len(ldims):
+                    shared *= ldims[i]
+            rprod = 1
+            for d in rdims:
+                rprod *= d
+            rfree = max(1, rprod // max(shared, 1))
+            flops += f * 2.0 * lprod * rfree
+            dot_count += f
+            bl, br, bo = _bytes_of(sd_l), _bytes_of(sd_r), _bytes_of(sd_o)
+            hbm += f * float(bl + br + bo)
+            l16 = bf16ish(c, lhs)
+            r16 = bf16ish(c, rhs)
+            pl = bl // 2 if (l16 and sd_l[0] == 4) else bl
+            pr = br // 2 if (r16 and sd_r[0] == 4) else br
+            po = bo // 2 if (l16 and r16 and sd_o and sd_o[0] == 4) else bo
+            hbm_proj += f * float(pl + pr + po)
+        if name in control:
+            hbm_upper += f * 2.0 * c["out_bytes"]
+        for kind, out_bytes, arg0, out_w in c["colls"]:
+            by_kind[kind][0] += f
+            by_kind[kind][1] += f * out_bytes
+            operand_total += f * out_bytes
+            pb = (
+                out_bytes // 2
+                if (out_w == 4 and bf16ish(c, arg0))
+                else out_bytes
+            )
+            mult_ar = 2 if kind == "all-reduce" else 1
+            traffic_total += f * out_bytes * mult_ar
+            traffic_proj += f * pb * mult_ar
+            hbm += 2.0 * f * out_bytes  # collectives also read+write HBM
+            hbm_proj += 2.0 * f * pb
+
+    return HloAnalysis(
+        flops=flops,
+        hbm_bytes=hbm,
+        hbm_bytes_proj=hbm_proj,
+        hbm_upper_bytes=hbm_upper,
+        collective_operand_bytes=operand_total,
+        collective_traffic_bytes=traffic_total,
+        collective_traffic_bytes_proj=traffic_proj,
+        collectives_by_kind={
+            k: {"count": v[0], "bytes": v[1]} for k, v in by_kind.items()
+        },
+        dot_count=dot_count,
+        n_computations=len(comps),
+    )
+
+
+# ---------------------------------------------------------------------------
+# roofline
+# ---------------------------------------------------------------------------
+
+
+def roofline_terms(
+    flops_per_device: float,
+    bytes_per_device: float,
+    collective_bytes_per_device: float,
+    *,
+    n_links: int = 1,
+):
+    """The three roofline terms (seconds) for one step on one chip."""
+    return {
+        "compute_s": flops_per_device / PEAK_FLOPS,
+        "memory_s": bytes_per_device / HBM_BW,
+        "collective_s": collective_bytes_per_device / (ICI_BW * n_links),
+    }
+
+
+def dominant(terms: dict) -> str:
+    return max(
+        ("compute_s", "memory_s", "collective_s"), key=lambda k: terms[k]
+    ).replace("_s", "")
+
+
+def model_flops(cfg, shape, n_params_total: int, n_params_active: int) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (prefill) / 2*N*B (decode)."""
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_params_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_params_active * tokens
+    return 2.0 * n_params_active * shape.global_batch
+
+
+def count_params(params_abs, cfg):
+    """(total, active): MoE expert params count top_k/E toward active."""
+    total = 0
+    expert = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_abs)[0]:
+        names = [p.key for p in path if isinstance(p, jax.tree_util.DictKey)]
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        if "moe" in names and names[-1] != "router":
+            expert += n
+    if cfg.n_experts:
+        active = total - expert + expert * cfg.top_k / cfg.n_experts
+    else:
+        active = total
+    return total, active

@@ -1,0 +1,48 @@
+"""ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+shardable, no device allocation (the dry-run pattern)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+
+
+def input_specs(cfg, shape) -> dict:
+    """Abstract batch for a (arch, shape) cell.
+
+    train/prefill: {"tokens": [B, S_tok]} (+ "prefix_embeds" for vlm/audio,
+    with S_tok + n_prefix == seq_len).
+    decode: {"tokens": [B, 1], "cache": <family cache at seq_len>}.
+    """
+    b = shape.global_batch
+    if shape.kind in ("train", "prefill"):
+        s_tok = shape.seq_len - (cfg.n_prefix or 0)
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s_tok), jnp.int32)}
+        if cfg.n_prefix:
+            specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_prefix, cfg.d_model), jnp.bfloat16
+            )
+        return specs
+    if shape.kind == "decode":
+        cache = jax.eval_shape(
+            lambda: lm.init_cache(cfg, b, shape.seq_len)
+        )
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            "cache": cache,
+        }
+    raise ValueError(shape.kind)
+
+
+def concrete_batch(cfg, shape, rng):
+    """Small-config concrete batch (smoke tests / examples)."""
+    specs = input_specs(cfg, shape)
+
+    def mk(s):
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            return jax.random.randint(rng, s.shape, 0, cfg.vocab).astype(s.dtype)
+        return jnp.zeros(s.shape, s.dtype)
+
+    return jax.tree.map(mk, specs)

@@ -1,0 +1,27 @@
+"""Serving step builders: batched prefill and KV-cache decode."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+
+
+def make_prefill_step(cfg):
+    def prefill_step(params, batch):
+        return lm.prefill(
+            params, batch["tokens"], cfg, prefix_embeds=batch.get("prefix_embeds")
+        )
+
+    return prefill_step
+
+
+def make_decode_step(cfg):
+    def decode_step(params, batch):
+        logits, cache = lm.decode_step(params, batch["tokens"], batch["cache"], cfg)
+        # greedy next token (sampling lives host-side in the server loop)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return decode_step

@@ -1,0 +1,181 @@
+"""Distributed train step builders.
+
+The training loop IS the Bismarck UDA (DESIGN.md §2): the step function is
+the ``transition`` (one microbatch-accumulated IGD step), GSPMD's gradient
+all-reduce over the data axes is the per-step ``merge``, and the
+``local-SGD`` variant defers the cross-pod merge to every H steps — the
+paper's shared-nothing model-averaging scheme applied at pod granularity
+(communication avoidance across the slow inter-pod links).
+
+Two step builders:
+  * ``make_train_step``      — synchronous minibatch SGD (merge period 1;
+                               the TPU-idiomatic 'shared-memory' analogue).
+  * ``make_localsgd_step``   — per-pod model instances (leading pod dim
+                               sharded over the "pod" axis) that train
+                               independently and average every H steps
+                               (Zinkevich merge).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+
+
+def _microbatch(batch, accum: int):
+    """[B, ...] -> [accum, B/accum, ...].
+
+    Strided split (reshape + swap) so each microbatch keeps one element per
+    batch shard: the per-microbatch batch dim stays fully sharded over the
+    data axes instead of collapsing onto a subset of devices."""
+    return jax.tree.map(
+        lambda x: x.reshape(
+            (x.shape[0] // accum, accum) + x.shape[1:]
+        ).swapaxes(0, 1),
+        batch,
+    )
+
+
+def make_train_step(cfg, optimizer, grad_accum: int = 1,
+                    compress_grads: bool = False,
+                    igd_microsteps: bool = False,
+                    cast_bf16: bool = False,
+                    param_shardings=None):
+    """Returns train_step(params, opt_state, batch, step) ->
+    (params, opt_state, metrics).
+
+    Two microbatching modes:
+    * accumulate (default) — fp32 gradient accumulation over ``grad_accum``
+      microbatches, one optimizer step (standard large-batch training);
+    * ``igd_microsteps`` — the PAPER-FAITHFUL mode: one IGD update per
+      microbatch (each microbatch is a 'tuple block' of the Bismarck
+      transition). No accumulation buffer exists, which also saves a full
+      fp32 param-sized buffer per device.
+
+    ``cast_bf16``: mixed-precision master weights — fp32 params are cast
+    to bf16 (on their shards) before the forward pass, so every FSDP
+    all-gather and matmul read moves bf16 instead of fp32 (halves the
+    dominant collective + memory traffic); gradients flow back to the fp32
+    masters through the cast.
+    """
+
+    def loss_fn(params, mb):
+        if cast_bf16:
+            def cast(p, s=None):
+                if p.dtype != jnp.float32:
+                    return p
+                p16 = p.astype(jnp.bfloat16)
+                if s is not None:
+                    # pin the bf16 copy to the SAME sharded layout so the
+                    # convert happens on shards and downstream all-gathers
+                    # move bf16, not f32 (XLA otherwise sinks the convert
+                    # past the gather)
+                    p16 = jax.lax.with_sharding_constraint(p16, s)
+                return p16
+
+            if param_shardings is not None:
+                params = jax.tree.map(cast, params, param_shardings)
+            else:
+                params = jax.tree.map(cast, params)
+        loss, metrics = lm.train_loss(params, mb, cfg)
+        return loss, metrics
+
+    def train_step(params, opt_state, batch, step):
+        mbs = _microbatch(batch, grad_accum)
+
+        if igd_microsteps:
+            def body(carry, mb):
+                p, o, k, l_acc = carry
+                (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(p, mb)
+                if compress_grads:
+                    g = jax.tree.map(
+                        lambda x: x.astype(jnp.bfloat16).astype(x.dtype), g
+                    )
+                p, o = optimizer.update(p, g, o, k)
+                return (p, o, k + 1, l_acc + loss), None
+
+            (params, opt_state, _, loss_sum), _ = jax.lax.scan(
+                body, (params, opt_state, step * grad_accum, jnp.float32(0.0)),
+                mbs,
+            )
+            metrics = {"loss": loss_sum / grad_accum,
+                       "grad_norm": jnp.float32(0.0)}
+            return params, opt_state, metrics
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def body(acc, mb):
+            g_acc, l_acc = acc
+            (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+            g_acc = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32), g_acc, g
+            )
+            return (g_acc, l_acc + loss), None
+
+        (grads, loss_sum), _ = jax.lax.scan(body, (g0, jnp.float32(0.0)), mbs)
+        grads = jax.tree.map(lambda g: g / grad_accum, grads)
+        if compress_grads:
+            # bf16 reduction precision on the (already GSPMD-reduced)
+            # accumulators: round-trip models the compressed all-reduce.
+            grads = jax.tree.map(
+                lambda g: g.astype(jnp.bfloat16).astype(jnp.float32), grads
+            )
+        new_params, new_opt = optimizer.update(params, grads, opt_state, step)
+        metrics = {
+            "loss": loss_sum / grad_accum,
+            "grad_norm": optax_global_norm(grads),
+        }
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def optax_global_norm(tree):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def make_localsgd_step(cfg, optimizer, grad_accum: int = 1, merge_period: int = 16):
+    """Local SGD across the pod axis (the paper's pure-UDA merge at scale).
+
+    Params carry a leading ``n_pods`` dim sharded over "pod"; each pod's
+    instance takes an independent step on its pod-local batch (vmap maps
+    collectives to within-pod), and every ``merge_period`` steps the
+    instances are averaged (the UDA ``merge``)."""
+
+    base_step = make_train_step(cfg, optimizer, grad_accum)
+
+    def step_fn(params_bank, opt_bank, batch_bank, step):
+        new_params, new_opt, metrics = jax.vmap(
+            lambda p, o, b: base_step(p, o, b, step)
+        )(params_bank, opt_bank, batch_bank)
+
+        def merge(t):
+            return jnp.broadcast_to(
+                jnp.mean(t, axis=0, keepdims=True), t.shape
+            ).astype(t.dtype)
+
+        do_merge = (step % merge_period) == merge_period - 1
+        new_params = jax.lax.cond(
+            do_merge,
+            lambda t: jax.tree.map(merge, t),
+            lambda t: t,
+            new_params,
+        )
+        metrics = jax.tree.map(lambda m: jnp.mean(m, axis=0), metrics)
+        return new_params, new_opt, metrics
+
+    return step_fn
+
+
+def replicate_for_pods(tree, n_pods: int):
+    """Add the leading per-pod dim for the local-SGD param bank."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n_pods,) + x.shape), tree
+    )

@@ -1,0 +1,127 @@
+"""End-to-end fault-tolerant training driver.
+
+Wires the Bismarck pieces together: ordering-aware pipeline -> jitted
+train step (the UDA transition) -> checkpoint manager (atomic, keep-k,
+async) -> watchdog (straggler accounting). Deterministic resume: the
+pipeline state rides in the checkpoint meta, so a killed-and-restarted run
+reproduces the uninterrupted run bit-for-bit (tested)."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import CheckpointManager
+from repro.data.pipeline import EpochPipeline, PipelineState
+from repro.dist import sharding as shd
+from repro.launch.train import make_train_step
+from repro.models import lm as lm_mod
+
+
+@dataclasses.dataclass
+class FitResult:
+    params: Any
+    opt_state: Any
+    step: int
+    losses: list
+    resumed_from: Optional[int]
+    straggler_events: int
+
+
+def fit(
+    cfg,
+    data: dict,
+    *,
+    optimizer,
+    steps: int,
+    global_batch: int,
+    grad_accum: int = 1,
+    ordering: str = "shuffle_once",
+    ckpt_dir: Optional[str] = None,
+    ckpt_every: int = 50,
+    keep: int = 3,
+    mesh=None,
+    seed: int = 0,
+    straggler_timeout_s: Optional[float] = None,
+    log_every: int = 10,
+    log_fn: Callable[[str], None] = print,
+) -> FitResult:
+    rng = jax.random.PRNGKey(seed)
+    if mesh is not None:
+        shd.set_activation_ctx(mesh)
+    params = lm_mod.init_lm(cfg, rng)
+    opt_state = optimizer.init(params)
+    if mesh is not None:
+        pspecs = shd.param_specs(params, cfg, mesh)
+        pshard = shd.shardings(pspecs, mesh)
+        params = jax.device_put(params, pshard)
+        opt_state = jax.tree.map(
+            lambda t: jax.device_put(t, pshard), opt_state
+        ) if opt_state else opt_state
+
+    step_fn = jax.jit(
+        make_train_step(cfg, optimizer, grad_accum), donate_argnums=(0, 1)
+    )
+
+    pipe = EpochPipeline(data, global_batch, ordering=ordering)
+    pstate = PipelineState(seed=seed)
+    start_step = 0
+    resumed_from = None
+    mgr = None
+    if ckpt_dir is not None:
+        mgr = CheckpointManager(ckpt_dir, keep=keep)
+        like = {"params": params, "opt": opt_state}
+        restored, meta = mgr.restore_latest(like)
+        if restored is not None:
+            params, opt_state = restored["params"], restored["opt"]
+            start_step = meta["step"]
+            pstate = PipelineState.from_meta(meta["meta"]["pipeline"])
+            resumed_from = start_step
+            log_fn(f"[resume] from step {start_step}, epoch {pstate.epoch}")
+
+    losses = []
+    straggler_events = 0
+    it = pipe.batches(pstate)
+    step = start_step
+    for step in range(start_step, steps):
+        batch, pstate = next(it)
+        t0 = time.perf_counter()
+        params, opt_state, metrics = step_fn(
+            params, opt_state, batch, jnp.int32(step)
+        )
+        jax.block_until_ready(metrics["loss"])
+        dt = time.perf_counter() - t0
+        if straggler_timeout_s is not None and dt > straggler_timeout_s:
+            # Straggler mitigation hook: in the multi-pod local-SGD path a
+            # slow pod's merge contribution is skipped (bounded staleness);
+            # on a single controller we record the event for the watchdog.
+            straggler_events += 1
+            log_fn(f"[watchdog] step {step} took {dt:.2f}s (> timeout)")
+        losses.append(float(metrics["loss"]))
+        if log_every and (step + 1) % log_every == 0:
+            log_fn(f"step {step + 1}: loss={losses[-1]:.4f} ({dt*1e3:.0f} ms)")
+        if mgr is not None and (step + 1) % ckpt_every == 0:
+            mgr.save(
+                step + 1,
+                {"params": params, "opt": opt_state},
+                meta={"pipeline": pstate.to_meta()},
+            )
+    if mgr is not None:
+        mgr.save(
+            steps,
+            {"params": params, "opt": opt_state},
+            meta={"pipeline": pstate.to_meta()},
+        )
+        mgr.wait()
+    return FitResult(
+        params=params,
+        opt_state=opt_state,
+        step=step + 1 if steps > start_step else start_step,
+        losses=losses,
+        resumed_from=resumed_from,
+        straggler_events=straggler_events,
+    )

@@ -1,0 +1,5 @@
+"""Model zoo: GQA transformers (dense + MoE), Mamba2/SSD, xLSTM, Zamba2
+hybrid, and modality stub frontends — all as functional param-pytree models
+suitable for pjit/shard_map distribution and lax.scan layer stacking."""
+
+from repro.models import lm  # noqa: F401

@@ -1,0 +1,206 @@
+"""Shared neural layers: RMSNorm, RoPE, GQA attention (train/prefill/decode
+with KV cache), MLP variants. Functional style: params are dict pytrees;
+every function is shape-polymorphic over batch."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}[
+        name
+    ]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    s = scale if scale is not None else 1.0 / jnp.sqrt(fan_in)
+    return (s * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms / rotary
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: Array, weight: Array, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: [..., S, H, hd]; positions: [..., S] (broadcast over heads)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # [hd/2]
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # [...,S,1,hd/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg) -> dict:
+    d, h, k, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    pd = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, h * hd), pd),
+        "wk": dense_init(ks[1], (d, k * hd), pd),
+        "wv": dense_init(ks[2], (d, k * hd), pd),
+        "wo": dense_init(ks[3], (h * hd, d), pd),
+    }
+
+
+def _soft_cap(logits: Array, cap: float) -> Array:
+    if cap and cap > 0:
+        return cap * jnp.tanh(logits / cap)
+    return logits
+
+
+ATTN_CHUNK = 512  # q-block size for the XLA chunked-attention path
+
+
+def _attn_core(q, k, v, q_pos, kv_limit, softcap):
+    """Grouped-GQA softmax attention for one q chunk (no KV-head repeat).
+
+    q: [B, C, Kv, G, hd]; k/v: [B, S, Kv, hd]; q_pos: [B, C];
+    kv_limit: [B] or scalar — kv positions >= limit are invalid.
+    Returns [B, C, Kv, G, hd]."""
+    hd = q.shape[-1]
+    kv_pos = jnp.arange(k.shape[1])
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", q, k) / jnp.sqrt(hd).astype(q.dtype)
+    logits = _soft_cap(logits.astype(jnp.float32), softcap)
+    mask = q_pos[:, :, None] >= kv_pos[None, None, :]  # causal [B, C, S]
+    mask = jnp.logical_and(mask, (kv_pos[None, :] < kv_limit[:, None])[:, None, :])
+    logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+
+
+def attention(
+    params: dict,
+    x: Array,
+    cfg,
+    positions: Array,
+    *,
+    cache: Optional[dict] = None,
+    cache_index: Optional[Array] = None,
+):
+    """GQA attention. Modes:
+      * cache None              -> full causal self-attention (train/prefill)
+      * cache provided          -> decode: q_len tokens appended at
+                                   ``cache_index``; returns updated cache.
+    x: [B, S, D]. cache: {"k","v": [B, S_max, Kv, hd]}.
+
+    Long sequences are processed in q chunks of ``ATTN_CHUNK`` inside a
+    rematerialized ``lax.scan`` — O(S * chunk) live memory instead of the
+    O(S^2) logits a naive einsum materializes (the XLA-level analogue of
+    the Pallas flash kernel in repro.kernels.attention)."""
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    g = h // kv
+    dt = x.dtype
+
+    q = (x @ params["wq"].astype(dt)).reshape(b, s, kv, g, hd)
+    k = (x @ params["wk"].astype(dt)).reshape(b, s, kv, hd)
+    v = (x @ params["wv"].astype(dt)).reshape(b, s, kv, hd)
+
+    q = apply_rope(q.reshape(b, s, kv * g, hd), positions, cfg.rope_theta)
+    q = q.reshape(b, s, kv, g, hd)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        # insert new k/v at cache_index (decode: s is small, usually 1)
+        ck, cv = cache["k"], cache["v"]
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), cache_index, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), cache_index, 1)
+        new_cache = {"k": ck, "v": cv}
+        k, v = ck.astype(dt), cv.astype(dt)
+        kv_limit = jnp.broadcast_to(cache_index + s, (b,))
+    else:
+        kv_limit = jnp.broadcast_to(jnp.int32(s), (b,))
+
+    if s > ATTN_CHUNK and s % ATTN_CHUNK == 0:
+        nc = s // ATTN_CHUNK
+        qc = q.reshape(b, nc, ATTN_CHUNK, kv, g, hd).swapaxes(0, 1)
+        pc = positions.reshape(b, nc, ATTN_CHUNK).swapaxes(0, 1)
+
+        @jax.checkpoint
+        def chunk_body(carry, inp):
+            qi, pi = inp
+            return carry, _attn_core(qi, k, v, pi, kv_limit, cfg.logit_softcap)
+
+        _, outc = jax.lax.scan(chunk_body, 0, (qc, pc))
+        out = outc.swapaxes(0, 1).reshape(b, s, kv, g, hd)
+    else:
+        out = _attn_core(q, k, v, positions, kv_limit, cfg.logit_softcap)
+
+    out = out.reshape(b, s, h * hd) @ params["wo"].astype(dt)
+    return out, new_cache
+
+
+def init_attention_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((batch, max_len, kv, hd), dtype),
+        "v": jnp.zeros((batch, max_len, kv, hd), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLP variants
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    pd = dtype_of(cfg.param_dtype)
+    gated = cfg.mlp in ("swiglu", "geglu")
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_in": dense_init(ks[0], (d, f), pd),
+        "w_out": dense_init(ks[1], (f, d), pd),
+    }
+    if gated:
+        p["w_gate"] = dense_init(ks[2], (d, f), pd)
+    return p
+
+
+def mlp(params: dict, x: Array, cfg) -> Array:
+    dt = x.dtype
+    hidden = x @ params["w_in"].astype(dt)
+    if cfg.mlp == "swiglu":
+        hidden = jax.nn.silu(x @ params["w_gate"].astype(dt)) * hidden
+    elif cfg.mlp == "geglu":
+        hidden = jax.nn.gelu(x @ params["w_gate"].astype(dt)) * hidden
+    elif cfg.mlp == "relu2":  # nemotron's squared ReLU
+        hidden = jnp.square(jax.nn.relu(hidden))
+    elif cfg.mlp == "gelu":
+        hidden = jax.nn.gelu(hidden)
+    else:
+        raise ValueError(cfg.mlp)
+    return hidden @ params["w_out"].astype(dt)

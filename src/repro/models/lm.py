@@ -1,0 +1,373 @@
+"""Unified LM: init / forward / train-loss / prefill / decode for every
+assigned architecture family.
+
+Families:
+  dense|moe|vlm|audio -> stacked transformer blocks (lax.scan over layers)
+  hybrid (zamba2)     -> Mamba2 segments + ONE shared attention block
+                         applied after every ``attn_every`` SSM blocks
+  ssm (xlstm)         -> segments of (slstm_every-1) mLSTM blocks + 1 sLSTM
+
+Layer parameters are stacked on a leading axis and folded with ``lax.scan``
+so compile time is depth-independent; ``cfg.remat`` wraps the block body in
+``jax.checkpoint`` for training. VLM/audio frontends are stubs per the
+assignment: ``prefix_embeds`` (precomputed patch/frame embeddings) arrive
+as inputs and are concatenated ahead of the token embeddings."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+from repro.models import layers, mamba2, moe, xlstm
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_tf_layer(key, cfg):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    pd = layers.dtype_of(cfg.param_dtype)
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), pd),
+        "attn": layers.init_attention(k1, cfg),
+        "ln2": jnp.ones((cfg.d_model,), pd),
+    }
+    if cfg.n_experts:
+        p["moe"] = moe.init_moe(k2, cfg)
+    else:
+        p["mlp"] = layers.init_mlp(k3, cfg)
+    return p
+
+
+def init_lm(cfg, rng) -> dict:
+    pd = layers.dtype_of(cfg.param_dtype)
+    keys = jax.random.split(rng, 8)
+    params = {
+        "embed": layers.dense_init(keys[0], (cfg.vocab, cfg.d_model), pd, scale=0.02),
+        "final_norm": jnp.ones((cfg.d_model,), pd),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.dense_init(
+            keys[1], (cfg.d_model, cfg.vocab), pd
+        )
+
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        lkeys = jax.random.split(keys[2], cfg.n_layers)
+        params["blocks"] = jax.vmap(lambda k: _init_tf_layer(k, cfg))(lkeys)
+    elif cfg.family == "hybrid":
+        n_seg = cfg.n_layers // cfg.attn_every
+        lkeys = jax.random.split(keys[2], cfg.n_layers).reshape(
+            n_seg, cfg.attn_every, 2
+        )
+        params["mamba"] = jax.vmap(
+            jax.vmap(lambda k: mamba2.init_mamba(k, cfg))
+        )(lkeys)
+        params["shared_ln"] = jnp.ones((cfg.d_model,), pd)
+        params["shared_attn"] = layers.init_attention(keys[3], cfg)
+        if cfg.d_ff:
+            # zamba2's shared block is a full transformer block (attn + MLP)
+            params["shared_ln2"] = jnp.ones((cfg.d_model,), pd)
+            params["shared_mlp"] = layers.init_mlp(keys[4], cfg)
+    elif cfg.family == "ssm":  # xlstm
+        n_seg = cfg.n_layers // cfg.slstm_every
+        n_m = cfg.slstm_every - 1
+        mkeys = jax.random.split(keys[2], n_seg * n_m).reshape(n_seg, n_m, 2)
+        skeys = jax.random.split(keys[3], n_seg)
+        params["mlstm"] = jax.vmap(
+            jax.vmap(lambda k: xlstm.init_mlstm(k, cfg))
+        )(mkeys)
+        params["slstm"] = jax.vmap(lambda k: xlstm.init_slstm(k, cfg))(skeys)
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch: int, max_len: int) -> dict:
+    """Decode cache pytree for any family (f32 SSM states, bf16 KV)."""
+    kv_dt = layers.dtype_of(cfg.dtype)
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        one = layers.init_attention_cache(cfg, batch, max_len, kv_dt)
+        return {
+            "kv": jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape), one
+            ),
+            "index": jnp.zeros((), jnp.int32),
+        }
+    if cfg.family == "hybrid":
+        n_seg = cfg.n_layers // cfg.attn_every
+        mc = mamba2.init_mamba_cache(cfg, batch)
+        ac = layers.init_attention_cache(cfg, batch, max_len, kv_dt)
+        return {
+            "mamba": jax.tree.map(
+                lambda x: jnp.broadcast_to(
+                    x, (n_seg, cfg.attn_every) + x.shape
+                ),
+                mc,
+            ),
+            "kv": jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (n_seg,) + x.shape), ac
+            ),
+            "index": jnp.zeros((), jnp.int32),
+        }
+    if cfg.family == "ssm":
+        n_seg = cfg.n_layers // cfg.slstm_every
+        n_m = cfg.slstm_every - 1
+        mc = xlstm.init_mlstm_cache(cfg, batch)
+        sc = xlstm.init_slstm_cache(cfg, batch)
+        return {
+            "mlstm": jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (n_seg, n_m) + x.shape), mc
+            ),
+            "slstm": jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (n_seg,) + x.shape), sc
+            ),
+            "index": jnp.zeros((), jnp.int32),
+        }
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _tf_block_apply(block, x, cfg, positions, kv=None, index=None):
+    a, new_kv = layers.attention(
+        block["attn"],
+        layers.rms_norm(x, block["ln1"], cfg.norm_eps),
+        cfg,
+        positions,
+        cache=kv,
+        cache_index=index,
+    )
+    x = x + a
+    h = layers.rms_norm(x, block["ln2"], cfg.norm_eps)
+    if cfg.n_experts:
+        out, aux = moe.moe_ffn(block["moe"], h, cfg)
+    else:
+        out, aux = layers.mlp(block["mlp"], h, cfg), jnp.float32(0.0)
+    return constrain(x + out, "resid"), new_kv, aux
+
+
+def _remat(fn, cfg):
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        )
+    return jax.checkpoint(fn)
+
+
+def _transformer_stack(params, x, cfg, positions, cache):
+    index = cache["index"] if cache is not None else None
+
+    def body(carry, xs):
+        h, aux = carry
+        if cache is not None:
+            block, kv = xs
+            h2, new_kv, a = _tf_block_apply(block, h, cfg, positions, kv, index)
+        else:
+            block = xs
+            h2, new_kv, a = _tf_block_apply(block, h, cfg, positions)
+        return (h2, aux + a), new_kv
+
+    if cfg.remat and cache is None:
+        body = _remat(body, cfg)
+
+    xs = (params["blocks"], cache["kv"]) if cache is not None else params["blocks"]
+    (x, aux), new_kv = jax.lax.scan(body, (x, jnp.float32(0.0)), xs)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"kv": new_kv, "index": index + x.shape[1]}
+    return x, aux, new_cache
+
+
+def _hybrid_stack(params, x, cfg, positions, cache):
+    index = cache["index"] if cache is not None else None
+
+    def seg_body(carry, xs):
+        h = carry
+        if cache is not None:
+            mp_seg, mc_seg, kv = xs
+        else:
+            mp_seg, mc_seg, kv = xs, None, None
+
+        def inner(h2, xs2):
+            if cache is not None:
+                mp, mc = xs2
+            else:
+                mp, mc = xs2, None
+            out, new_mc = mamba2.mamba_block(mp, h2, cfg, cache=mc)
+            return h2 + out, new_mc
+
+        h, new_mc_seg = jax.lax.scan(
+            inner, h, (mp_seg, mc_seg) if cache is not None else mp_seg
+        )
+        a, new_kv = layers.attention(
+            params["shared_attn"],
+            layers.rms_norm(h, params["shared_ln"], cfg.norm_eps),
+            cfg,
+            positions,
+            cache=kv,
+            cache_index=index,
+        )
+        h = h + a
+        if cfg.d_ff:
+            h = h + layers.mlp(
+                params["shared_mlp"],
+                layers.rms_norm(h, params["shared_ln2"], cfg.norm_eps),
+                cfg,
+            )
+        return h, (new_mc_seg, new_kv)
+
+    if cfg.remat and cache is None:
+        seg_body = _remat(seg_body, cfg)
+
+    xs = (
+        (params["mamba"], cache["mamba"], cache["kv"])
+        if cache is not None
+        else params["mamba"]
+    )
+    x, outs = jax.lax.scan(seg_body, x, xs)
+    new_cache = None
+    if cache is not None:
+        new_mc, new_kv = outs
+        new_cache = {"mamba": new_mc, "kv": new_kv, "index": index + x.shape[1]}
+    return x, jnp.float32(0.0), new_cache
+
+
+def _xlstm_stack(params, x, cfg, positions, cache):
+    del positions  # recurrent families are position-free
+
+    def seg_body(carry, xs):
+        h = carry
+        if cache is not None:
+            (mp_seg, sp), (mc_seg, sc) = xs
+        else:
+            mp_seg, sp = xs
+            mc_seg = sc = None
+
+        def inner(h2, xs2):
+            if cache is not None:
+                mp, mc = xs2
+            else:
+                mp, mc = xs2, None
+            out, new_mc = xlstm.mlstm_block(mp, h2, cfg, cache=mc)
+            return h2 + out, new_mc
+
+        h, new_mc_seg = jax.lax.scan(
+            inner, h, (mp_seg, mc_seg) if cache is not None else mp_seg
+        )
+        out, new_sc = xlstm.slstm_block(sp, h, cfg, cache=sc)
+        h = h + out
+        return h, (new_mc_seg, new_sc)
+
+    if cfg.remat and cache is None:
+        seg_body = _remat(seg_body, cfg)
+
+    if cache is not None:
+        xs = ((params["mlstm"], params["slstm"]), (cache["mlstm"], cache["slstm"]))
+    else:
+        xs = (params["mlstm"], params["slstm"])
+    x, outs = jax.lax.scan(seg_body, x, xs)
+    new_cache = None
+    if cache is not None:
+        new_mc, new_sc = outs
+        new_cache = {
+            "mlstm": new_mc,
+            "slstm": new_sc,
+            "index": cache["index"] + x.shape[1],
+        }
+    return x, jnp.float32(0.0), new_cache
+
+
+def forward(
+    params,
+    tokens: Array,
+    cfg,
+    *,
+    prefix_embeds: Optional[Array] = None,
+    cache: Optional[dict] = None,
+):
+    """tokens: [B, S_tok] -> (logits [B, S, vocab] fp32, aux, new_cache).
+
+    With ``prefix_embeds`` [B, P, D] (vlm/audio stub frontends), the prefix
+    is prepended; logits cover the full [P + S_tok] sequence."""
+    dt = layers.dtype_of(cfg.dtype)
+    # cast the table BEFORE the gather: halves the (possibly replicated)
+    # gather output and keeps the embedding lookup in activation dtype
+    x = params["embed"].astype(dt)[tokens]
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(dt), x], axis=1)
+    x = constrain(x, "resid")
+    b, s, _ = x.shape
+    start = cache["index"] if cache is not None else jnp.int32(0)
+    positions = start + jnp.arange(s)[None, :].astype(jnp.int32)
+    positions = jnp.broadcast_to(positions, (b, s))
+
+    stack = {
+        "dense": _transformer_stack,
+        "moe": _transformer_stack,
+        "vlm": _transformer_stack,
+        "audio": _transformer_stack,
+        "hybrid": _hybrid_stack,
+        "ssm": _xlstm_stack,
+    }[cfg.family]
+    x, aux, new_cache = stack(params, x, cfg, positions, cache)
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (
+        params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    ).astype(dt)
+    logits = (x @ head).astype(jnp.float32)
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    logits = constrain(logits, "logits")
+    return logits, aux, new_cache
+
+
+# ---------------------------------------------------------------------------
+# train / serve entry points
+# ---------------------------------------------------------------------------
+
+
+def train_loss(params, batch: dict, cfg, aux_weight: float = 0.01):
+    """Next-token CE over the token region (prefix positions are context
+    only). batch: {"tokens": [B,S_tok]} (+ optional "prefix_embeds")."""
+    tokens = batch["tokens"]
+    prefix = batch.get("prefix_embeds")
+    logits, aux, _ = forward(params, tokens, cfg, prefix_embeds=prefix)
+    p = 0 if prefix is None else prefix.shape[1]
+    # predict tokens[t+1] from position p+t
+    pred = logits[:, p : p + tokens.shape[1] - 1, :]
+    tgt = tokens[:, 1:]
+    logz = jax.nn.logsumexp(pred, axis=-1)
+    gold = jnp.take_along_axis(pred, tgt[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(logz - gold)
+    return ce + aux_weight * aux, {"ce": ce, "aux": aux}
+
+
+def prefill(params, tokens: Array, cfg, prefix_embeds: Optional[Array] = None):
+    """Serving prefill: full forward, returns last-position logits + cache
+    where the family supports cache construction from parallel prefill."""
+    logits, _, _ = forward(params, tokens, cfg, prefix_embeds=prefix_embeds)
+    return logits[:, -1, :]
+
+
+def decode_step(params, tokens: Array, cache: dict, cfg):
+    """One decode step: tokens [B, 1] + cache -> (logits [B, vocab], cache)."""
+    logits, _, new_cache = forward(params, tokens, cfg, cache=cache)
+    return logits[:, -1, :], new_cache

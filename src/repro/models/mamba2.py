@@ -1,0 +1,186 @@
+"""Mamba2 (SSD) mixer — chunked state-space duality algorithm.
+
+Training/prefill uses the chunk-parallel SSD form (quadratic within a
+chunk, linear across chunks — all matmuls, MXU-friendly); decode is the
+O(1) recurrent update. Single B/C group shared across heads (n_groups=1),
+scalar A per head, depthwise causal conv over (x, B, C) — the Mamba2
+architecture as in Dao & Gu 2024, sized by ``cfg.ssm_*`` fields.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+Array = jax.Array
+
+CHUNK = 256
+
+
+def dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads, cfg.ssm_state
+
+
+def init_mamba(key, cfg) -> dict:
+    d = cfg.d_model
+    d_inner, h, n = dims(cfg)
+    conv_dim = d_inner + 2 * n
+    pd = layers.dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    return {
+        # projects to [z (gate), x, B, C, dt]
+        "w_in": layers.dense_init(ks[0], (d, 2 * d_inner + 2 * n + h), pd),
+        "conv_w": layers.dense_init(ks[1], (cfg.ssm_conv, conv_dim), pd, scale=0.5),
+        "conv_b": jnp.zeros((conv_dim,), pd),
+        "a_log": jnp.log(
+            jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)
+        ).astype(pd),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((h,), 0.01))).astype(pd),
+        "d_skip": jnp.ones((h,), pd),
+        "norm": jnp.ones((d_inner,), pd),
+        "w_out": layers.dense_init(ks[2], (d_inner, d), pd),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array, state: Optional[Array] = None):
+    """Depthwise causal conv, kernel K. x: [B, S, C]; state: [B, K-1, C].
+    Returns (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # [B, S+K-1, C]
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i].astype(x.dtype) for i in range(k))
+    y = jax.nn.silu(y + b.astype(x.dtype))
+    new_state = xp[:, -(k - 1) :, :]
+    return y, new_state
+
+
+def ssd_chunked(x, dt, a, b, c, d_skip, init_state=None):
+    """Chunk-parallel SSD.
+
+    x: [B, L, H, P]; dt: [B, L, H] (post-softplus); a: [H] (negative);
+    b, c: [B, L, N]; init_state: [B, H, P, N] or None.
+    Returns (y [B,L,H,P], final_state [B,H,P,N]).
+    """
+    bs, l, h, p = x.shape
+    n = b.shape[-1]
+    q = min(CHUNK, l)
+    assert l % q == 0, f"seq {l} not divisible by chunk {q}"
+    nc = l // q
+
+    xb = x.reshape(bs, nc, q, h, p)
+    dtb = dt.reshape(bs, nc, q, h)
+    bb = b.reshape(bs, nc, q, n)
+    cb = c.reshape(bs, nc, q, n)
+
+    log_a = dtb * a.astype(dtb.dtype)  # [B,NC,Q,H], negative
+    la = jnp.cumsum(log_a, axis=2)  # within-chunk cumulative
+
+    # intra-chunk: M[t,s] = exp(la_t - la_s) * (c_t . b_s) * dt_s,  s <= t
+    seg = la[:, :, :, None, :] - la[:, :, None, :, :]  # [B,NC,Q(t),Q(s),H]
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    seg = jnp.where(tri[None, None, :, :, None], seg, -jnp.inf)
+    cbs = jnp.einsum("bctn,bcsn->bcts", cb, bb)  # [B,NC,Q,Q]
+    m = jnp.exp(seg) * cbs[..., None] * dtb[:, :, None, :, :]  # [B,NC,t,s,H]
+    y_intra = jnp.einsum("bctsh,bcshp->bcthp", m.astype(x.dtype), xb)
+
+    # chunk summaries: S_c = sum_s exp(la_end - la_s) dt_s x_s b_s^T
+    decay_to_end = jnp.exp(la[:, :, -1:, :] - la)  # [B,NC,Q,H]
+    wgt = (decay_to_end * dtb).astype(x.dtype)
+    s_chunk = jnp.einsum("bcsh,bcshp,bcsn->bchpn", wgt, xb, bb)
+
+    # inter-chunk scan: S_{c} = exp(sum log_a_c) S_{c-1} + S_chunk_c
+    chunk_decay = jnp.exp(jnp.sum(log_a, axis=2))  # [B,NC,H]
+    if init_state is None:
+        init_state = jnp.zeros((bs, h, p, n), x.dtype)
+
+    def scan_body(s, inp):
+        dec, sc = inp  # dec [B,H], sc [B,H,P,N]
+        s_new = dec[:, :, None, None].astype(s.dtype) * s + sc
+        return s_new, s
+
+    chunk_decay_t = jnp.moveaxis(chunk_decay, 1, 0)  # [NC,B,H]
+    s_chunk_t = jnp.moveaxis(s_chunk, 1, 0)  # [NC,B,H,P,N]
+    final_state, prev_states = jax.lax.scan(
+        scan_body, init_state, (chunk_decay_t, s_chunk_t)
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # [B,NC,H,P,N]
+
+    # inter-chunk contribution: y_t += exp(la_t) * (c_t . S_prev)
+    decay_in = jnp.exp(la)  # [B,NC,Q,H]
+    y_inter = jnp.einsum(
+        "bctn,bchpn,bcth->bcthp", cb, prev_states, decay_in.astype(x.dtype)
+    )
+
+    y = (y_intra + y_inter).reshape(bs, l, h, p)
+    y = y + x * d_skip.astype(x.dtype)[None, None, :, None]
+    return y, final_state
+
+
+def ssd_step(x, dt, a, b, c, d_skip, state):
+    """One-token recurrence. x: [B,H,P]; dt: [B,H]; b,c: [B,N];
+    state: [B,H,P,N]. Returns (y [B,H,P], new_state)."""
+    decay = jnp.exp(dt * a.astype(dt.dtype))  # [B,H]
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt.astype(x.dtype), x, b)
+    new_state = decay[:, :, None, None].astype(x.dtype) * state + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, c)
+    return y + x * d_skip.astype(x.dtype)[None, :, None], new_state
+
+
+def mamba_block(params: dict, x: Array, cfg, *, cache: Optional[dict] = None):
+    """Full Mamba2 mixer. x: [B, S, D]. cache: {"conv": [B,K-1,C], "ssm":
+    [B,H,P,N]} for decode (S small); None for train/prefill-from-scratch.
+    Returns (out, new_cache_or_None)."""
+    bs, s, d = x.shape
+    d_inner, h, n = dims(cfg)
+    dt_ = x.dtype
+
+    proj = x @ params["w_in"].astype(dt_)
+    z, xbc, dt_raw = jnp.split(proj, [d_inner, 2 * d_inner + 2 * n], axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    xbc, new_conv = _causal_conv(
+        xbc, params["conv_w"], params["conv_b"], conv_state
+    )
+    xs, b, c = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    xh = xs.reshape(bs, s, h, cfg.ssm_head_dim)
+
+    if cache is not None and s == 1:
+        y, new_ssm = ssd_step(
+            xh[:, 0], dt[:, 0], a, b[:, 0], c[:, 0], params["d_skip"],
+            cache["ssm"].astype(dt_),
+        )
+        y = y[:, None]  # [B,1,H,P]
+    else:
+        init_state = cache["ssm"].astype(dt_) if cache is not None else None
+        y, new_ssm = ssd_chunked(xh, dt, a, b, c, params["d_skip"], init_state)
+
+    y = y.reshape(bs, s, d_inner)
+    y = layers.rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = y @ params["w_out"].astype(dt_)
+    new_cache = (
+        {"conv": new_conv.astype(jnp.float32), "ssm": new_ssm.astype(jnp.float32)}
+        if cache is not None
+        else None
+    )
+    return out, new_cache
+
+
+def init_mamba_cache(cfg, batch: int) -> dict:
+    d_inner, h, n = dims(cfg)
+    conv_dim = d_inner + 2 * n
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), jnp.float32),
+        "ssm": jnp.zeros((batch, h, cfg.ssm_head_dim, n), jnp.float32),
+    }

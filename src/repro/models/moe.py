@@ -1,0 +1,101 @@
+"""Mixture-of-Experts FFN with capacity-based token dispatch.
+
+Routing strategy: tokens are processed in fixed-size groups of
+``cfg.moe_block`` tokens; within a group we compute a top-k one-hot
+dispatch tensor [G, Bt, E, C] (GShard/MaxText 'dropping' style) and
+dispatch/combine with two einsums. This is the GSPMD-friendly baseline —
+deterministic shapes, shardable over both tokens (data axis) and experts
+(model axis). The dispatch-einsum overhead is O(E*C*D) per token and is a
+hillclimb target (ragged/sort-based dispatch).
+
+Aux load-balance loss follows Switch Transformer: E * sum_e f_e * p_e.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+Array = jax.Array
+
+
+def init_moe(key, cfg) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    pd = layers.dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    gated = cfg.mlp in ("swiglu", "geglu")
+    p = {
+        "router": layers.dense_init(ks[0], (d, e), pd),
+        "w_in": layers.dense_init(ks[1], (e, d, f), pd),
+        "w_out": layers.dense_init(ks[2], (e, f, d), pd),
+    }
+    if gated:
+        p["w_gate"] = layers.dense_init(ks[3], (e, d, f), pd)
+    return p
+
+
+def _capacity(cfg) -> int:
+    cap = int(cfg.moe_block * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(8, (cap + 7) // 8 * 8)
+
+
+def moe_ffn(params: dict, x: Array, cfg):
+    """x: [B, S, D] -> (out [B, S, D], aux_loss scalar)."""
+    dt = x.dtype
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    bt = min(cfg.moe_block, b * s)
+    tokens = x.reshape(-1, d)
+    n = tokens.shape[0]
+    pad = (-n) % bt
+    if pad:
+        tokens = jnp.concatenate([tokens, jnp.zeros((pad, d), dt)], axis=0)
+    g = (n + pad) // bt
+    xg = tokens.reshape(g, bt, d)
+
+    logits = (xg @ params["router"].astype(dt)).astype(jnp.float32)  # [G,Bt,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # [G,Bt,k]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    # aux load-balance loss (Switch): fraction routed vs mean router prob
+    onehot_top1 = jax.nn.one_hot(gate_idx[..., 0], e, dtype=jnp.float32)
+    f_e = jnp.mean(onehot_top1, axis=(0, 1))
+    p_e = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(f_e * p_e)
+
+    # position of each (token, choice) within its expert's capacity buffer
+    cap = _capacity(cfg)
+    choice_oh = jax.nn.one_hot(gate_idx, e, dtype=jnp.int32)  # [G,Bt,k,E]
+    flat = choice_oh.reshape(g, bt * k, e)
+    pos_in_e = jnp.cumsum(flat, axis=1) * flat - 1  # [G,Bt*k,E], -1 where unrouted
+    pos_in_e = pos_in_e.reshape(g, bt, k, e)
+    kept = jnp.logical_and(pos_in_e >= 0, pos_in_e < cap)
+
+    # dispatch/combine tensors [G, Bt, E, C]
+    cap_oh = jax.nn.one_hot(jnp.where(kept, pos_in_e, -1), cap, dtype=dt)
+    dispatch = jnp.sum(cap_oh * kept.astype(dt)[..., None], axis=2)  # [G,Bt,E,C]
+    combine = jnp.sum(
+        cap_oh * (kept * gate_vals[..., None]).astype(dt)[..., None], axis=2
+    )
+
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch, xg)  # [G,E,C,D]
+    hidden = jnp.einsum("gecd,edf->gecf", xe, params["w_in"].astype(dt))
+    if cfg.mlp == "swiglu":
+        gatev = jnp.einsum("gecd,edf->gecf", xe, params["w_gate"].astype(dt))
+        hidden = jax.nn.silu(gatev) * hidden
+    elif cfg.mlp == "geglu":
+        gatev = jnp.einsum("gecd,edf->gecf", xe, params["w_gate"].astype(dt))
+        hidden = jax.nn.gelu(gatev) * hidden
+    elif cfg.mlp == "relu2":
+        hidden = jnp.square(jax.nn.relu(hidden))
+    else:
+        hidden = jax.nn.gelu(hidden)
+    ye = jnp.einsum("gecf,efd->gecd", hidden, params["w_out"].astype(dt))
+    out = jnp.einsum("gtec,gecd->gtd", combine, ye)  # [G,Bt,D]
+    out = out.reshape(-1, d)[:n]
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,220 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) and sLSTM (scalar
+memory with recurrent mixing), per Beck et al. 2024.
+
+mLSTM train/prefill uses the stabilized quadratic parallel form (a
+decay-masked attention-like matmul); decode is the O(1) recurrent update on
+the (C, n, m) state. sLSTM is inherently sequential (recurrent h->gates
+connection) and runs as a lax.scan over time. ``d_ff == 0`` in the xlstm
+config: blocks carry their own up/down projections instead of a separate
+FFN (the xLSTM block design)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def _mlstm_dims(cfg):
+    d_inner = 2 * cfg.d_model  # up-projection factor 2
+    hd = d_inner // cfg.n_heads
+    return d_inner, cfg.n_heads, hd
+
+
+def init_mlstm(key, cfg) -> dict:
+    d = cfg.d_model
+    d_inner, h, hd = _mlstm_dims(cfg)
+    pd = layers.dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 7)
+    return {
+        "w_up": layers.dense_init(ks[0], (d, 2 * d_inner), pd),  # x path + gate
+        "wq": layers.dense_init(ks[1], (d_inner, d_inner), pd),
+        "wk": layers.dense_init(ks[2], (d_inner, d_inner), pd),
+        "wv": layers.dense_init(ks[3], (d_inner, d_inner), pd),
+        "w_if": layers.dense_init(ks[4], (d_inner, 2 * h), pd, scale=0.01),
+        "b_i": jnp.full((h,), -3.0, pd),  # input gate starts mostly closed
+        "b_f": jnp.full((h,), 3.0, pd),  # forget gate starts mostly open
+        "norm": jnp.ones((d_inner,), pd),
+        "w_down": layers.dense_init(ks[5], (d_inner, d), pd),
+    }
+
+
+def mlstm_parallel(q, k, v, i_pre, f_pre):
+    """Stabilized quadratic mLSTM.
+
+    q,k,v: [B,S,H,hd]; i_pre,f_pre: [B,S,H] pre-activations.
+    D~[t,s] = sum_{u=s+1..t} logsig(f_u) + i_s  for s<=t.
+    h_t = (S v)_t / max(|sum_s S_ts|, exp(-m_t)),  S = (q k^T/sqrt(d)) exp(D~-m).
+    """
+    bs, s, h, hd = q.shape
+    logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))  # [B,S,H]
+    cf = jnp.cumsum(logf, axis=1)
+    # sum_{u=s+1..t} logf_u = cf_t - cf_s
+    dmat = cf[:, :, None, :] - cf[:, None, :, :]  # [B,t,s,H]
+    dmat = dmat + i_pre.astype(jnp.float32)[:, None, :, :]
+    tri = jnp.tril(jnp.ones((s, s), bool))
+    dmat = jnp.where(tri[None, :, :, None], dmat, -jnp.inf)
+    m = jnp.max(dmat, axis=2, keepdims=True)  # [B,t,1,H]
+    m = jnp.maximum(m, -1e30)  # guard all -inf rows
+    dexp = jnp.exp(dmat - m)  # [B,t,s,H]
+
+    logits = jnp.einsum("bthd,bshd->btsh", q, k) / jnp.sqrt(hd).astype(q.dtype)
+    smat = logits.astype(jnp.float32) * dexp
+    norm = jnp.maximum(
+        jnp.abs(jnp.sum(smat, axis=2)), jnp.exp(-m[:, :, 0, :])
+    )  # [B,t,H]
+    weights = (smat / jnp.maximum(norm[:, :, None, :], 1e-30)).astype(q.dtype)
+    return jnp.einsum("btsh,bshd->bthd", weights, v)
+
+
+def mlstm_step(q, k, v, i_pre, f_pre, state):
+    """Recurrent mLSTM update. q,k,v: [B,H,hd]; i_pre,f_pre: [B,H];
+    state: {"c": [B,H,hd,hd], "n": [B,H,hd], "m": [B,H]} (f32)."""
+    logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
+    i32 = i_pre.astype(jnp.float32)
+    m_new = jnp.maximum(logf + state["m"], i32)
+    fdec = jnp.exp(logf + state["m"] - m_new)
+    iamp = jnp.exp(i32 - m_new)
+    k32, v32, q32 = (t.astype(jnp.float32) for t in (k, v, q))
+    c_new = fdec[..., None, None] * state["c"] + iamp[..., None, None] * (
+        v32[..., :, None] * k32[..., None, :]
+    )
+    n_new = fdec[..., None] * state["n"] + iamp[..., None] * k32
+    q32 = q32 / jnp.sqrt(q.shape[-1])
+    num = jnp.einsum("bhvk,bhk->bhv", c_new, q32)
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, q32)), jnp.exp(-m_new)
+    )
+    h = (num / den[..., None]).astype(q.dtype)
+    return h, {"c": c_new, "n": n_new, "m": m_new}
+
+
+def mlstm_block(params: dict, x: Array, cfg, *, cache: Optional[dict] = None):
+    """x: [B,S,D] -> (out, new_cache). Decode when cache is not None, S==1."""
+    bs, s, d = x.shape
+    d_inner, h, hd = _mlstm_dims(cfg)
+    dt = x.dtype
+
+    up = x @ params["w_up"].astype(dt)
+    xin, gate = jnp.split(up, 2, axis=-1)
+    q = (xin @ params["wq"].astype(dt)).reshape(bs, s, h, hd)
+    k = (xin @ params["wk"].astype(dt)).reshape(bs, s, h, hd)
+    v = (xin @ params["wv"].astype(dt)).reshape(bs, s, h, hd)
+    gif = xin @ params["w_if"].astype(dt)  # [B,S,2H]
+    i_pre = gif[..., :h] + params["b_i"].astype(dt)
+    f_pre = gif[..., h:] + params["b_f"].astype(dt)
+
+    if cache is not None and s == 1:
+        hsq, new_state = mlstm_step(
+            q[:, 0], k[:, 0], v[:, 0], i_pre[:, 0], f_pre[:, 0], cache
+        )
+        hs = hsq[:, None]
+        new_cache = new_state
+    else:
+        hs = mlstm_parallel(q, k, v, i_pre, f_pre)
+        new_cache = None
+        if cache is not None:  # prefill-into-cache: replay recurrence once
+            raise NotImplementedError("mLSTM prefill-into-cache uses scan path")
+    hs = hs.reshape(bs, s, d_inner)
+    hs = layers.rms_norm(hs, params["norm"], cfg.norm_eps) * jax.nn.silu(gate)
+    return hs @ params["w_down"].astype(dt), new_cache
+
+
+def init_mlstm_cache(cfg, batch: int) -> dict:
+    _, h, hd = _mlstm_dims(cfg)
+    return {
+        "c": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, h, hd), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    pd = layers.dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        # input weights for (i, f, z, o)
+        "w_x": layers.dense_init(ks[0], (d, 4 * d), pd),
+        # block-diagonal recurrent weights per head, (gate, H, hd, hd)
+        "r_h": layers.dense_init(ks[1], (4, h, hd, hd), pd, scale=1.0 / hd**0.5),
+        "b": jnp.concatenate(
+            [jnp.full((d,), -2.0), jnp.full((d,), 2.0), jnp.zeros((2 * d,))]
+        ).astype(pd),
+        "norm": jnp.ones((d,), pd),
+        "w_out": layers.dense_init(ks[2], (d, d), pd),
+    }
+
+
+def _slstm_cell(params, x_t, state, cfg):
+    """One sLSTM step. x_t: [B, 4D] (pre-computed input proj);
+    state: {"c","n","h": [B,D], "m": [B,D]} in f32."""
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    bsz = x_t.shape[0]
+    hprev = state["h"].reshape(bsz, h, hd)
+    rec = jnp.einsum("bhk,ghvk->bghv", hprev, params["r_h"].astype(jnp.float32))
+    rec = rec.reshape(bsz, 4 * d)
+    pre = x_t.astype(jnp.float32) + rec + params["b"].astype(jnp.float32)
+    ip, fp, zp, op = jnp.split(pre, 4, axis=-1)
+    m_new = jnp.maximum(fp + state["m"], ip)  # exponential-gate stabilizer
+    i = jnp.exp(ip - m_new)
+    f = jnp.exp(fp + state["m"] - m_new)
+    z = jnp.tanh(zp)
+    o = jax.nn.sigmoid(op)
+    c_new = f * state["c"] + i * z
+    n_new = f * state["n"] + i
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
+
+
+def slstm_block(params: dict, x: Array, cfg, *, cache: Optional[dict] = None):
+    """x: [B,S,D]; sequential over S via lax.scan (or one step for decode)."""
+    bs, s, d = x.shape
+    dt = x.dtype
+    xproj = x @ params["w_x"].astype(dt)  # [B,S,4D]
+    state = cache if cache is not None else init_slstm_cache_dims(bs, d)
+
+    if s == 1 and cache is not None:
+        new_state = _slstm_cell(params, xproj[:, 0], state, cfg)
+        hs = new_state["h"][:, None].astype(dt)
+        new_cache = new_state
+    else:
+        def step(st, xt):
+            st2 = _slstm_cell(params, xt, st, cfg)
+            return st2, st2["h"]
+
+        xs = jnp.moveaxis(xproj, 1, 0)  # [S,B,4D]
+        new_state, hs = jax.lax.scan(step, state, xs)
+        hs = jnp.moveaxis(hs, 0, 1).astype(dt)
+        new_cache = new_state if cache is not None else None
+
+    hs = layers.rms_norm(hs, params["norm"], cfg.norm_eps)
+    return hs @ params["w_out"].astype(dt), new_cache
+
+
+def init_slstm_cache_dims(batch: int, d: int) -> dict:
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, d), -30.0, jnp.float32)}
+
+
+def init_slstm_cache(cfg, batch: int) -> dict:
+    return init_slstm_cache_dims(batch, cfg.d_model)

@@ -1,0 +1,5 @@
+"""Optimizers: IGD/SGD (the paper's algorithm — the framework default) and
+AdamW (beyond-paper), plus gradient compression for cheap all-reduce."""
+
+from repro.optim.sgd import IGD, AdamW  # noqa: F401
+from repro.optim import compression  # noqa: F401

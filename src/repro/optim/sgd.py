@@ -1,0 +1,82 @@
+"""IGD (SGD) — the paper's optimizer — with the Appendix-B step-size rules
+and optional momentum; AdamW as the beyond-paper alternative. Functional
+optax-like API: ``init(params) -> state``, ``update(params, grads, state,
+step) -> (params, state)``. States shard exactly like their parameters."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import igd as igd_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class IGD:
+    """Incremental gradient descent (paper Eq. 2) over pytree models."""
+
+    step_size: igd_lib.StepSize
+    momentum: float = 0.0
+    weight_decay: float = 0.0
+
+    def init(self, params):
+        if self.momentum:
+            return (jax.tree.map(jnp.zeros_like, params),)
+        return ()
+
+    def update(self, params, grads, state, step):
+        alpha = self.step_size(step)
+        if self.weight_decay:
+            grads = jax.tree.map(
+                lambda g, p: g + self.weight_decay * p, grads, params
+            )
+        if self.momentum:
+            (buf,) = state
+            buf = jax.tree.map(
+                lambda b, g: (self.momentum * b + g).astype(b.dtype),
+                buf, grads,
+            )
+            new_params = jax.tree.map(
+                lambda p, b: (p - alpha * b).astype(p.dtype), params, buf
+            )
+            return new_params, (buf,)
+        new_params = jax.tree.map(
+            lambda p, g: (p - alpha * g).astype(p.dtype), params, grads
+        )
+        return new_params, ()
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+    def init(self, params):
+        z = jax.tree.map(jnp.zeros_like, params)
+        return (z, jax.tree.map(jnp.zeros_like, params))
+
+    def update(self, params, grads, state, step):
+        m, v = state
+        t = step.astype(jnp.float32) + 1.0
+        m = jax.tree.map(lambda a, g: self.b1 * a + (1 - self.b1) * g, m, grads)
+        v = jax.tree.map(
+            lambda a, g: self.b2 * a + (1 - self.b2) * g * g, v, grads
+        )
+        bc1 = 1.0 - self.b1**t
+        bc2 = 1.0 - self.b2**t
+
+        def upd(p, mm, vv):
+            mh = mm / bc1
+            vh = vv / bc2
+            return (
+                p - self.lr * (
+                    mh / (jnp.sqrt(vh) + self.eps) + self.weight_decay * p
+                )
+            ).astype(p.dtype)
+
+        return jax.tree.map(upd, params, m, v), (m, v)

@@ -1,0 +1,16 @@
+"""Analytics tasks (paper Fig. 1B): each task supplies only its per-example
+objective f_i(w) (and optionally an explicit gradient / prox); the Bismarck
+engine in ``repro.core`` does everything else."""
+
+from repro.tasks.base import Task  # noqa: F401
+from repro.tasks.glm import (  # noqa: F401
+    LeastSquares,
+    LogisticRegression,
+    SparseLogisticRegression,
+    SparseSVM,
+    SVM,
+)
+from repro.tasks.lmf import LowRankMF  # noqa: F401
+from repro.tasks.crf import LinearChainCRF  # noqa: F401
+from repro.tasks.kalman import KalmanFilterTask  # noqa: F401
+from repro.tasks.portfolio import PortfolioOpt  # noqa: F401

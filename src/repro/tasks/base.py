@@ -1,0 +1,29 @@
+"""Task protocol: the ~10-lines-of-code contract from the paper (Fig. 4).
+
+A task defines ``init_model`` and ``example_loss``; ``example_grad`` comes
+for free from ``jax.grad`` (tasks may override it with a hand-written
+gradient, mirroring the paper's hand-coded transitions). ``full_loss`` is
+the piggybacked objective evaluation used by convergence tests."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+class Task:
+    def init_model(self, rng: jax.Array):
+        raise NotImplementedError
+
+    def example_loss(self, model, example) -> jax.Array:
+        raise NotImplementedError
+
+    def example_grad(self, model, example):
+        return jax.grad(self.example_loss)(model, example)
+
+    def regularizer(self, model) -> jax.Array:
+        return jnp.float32(0.0)
+
+    def full_loss(self, model, data) -> jax.Array:
+        per = jax.vmap(lambda ex: self.example_loss(model, ex))(data)
+        return jnp.sum(per) + self.regularizer(model)

@@ -1,0 +1,78 @@
+"""Baseline solvers the paper compares against (stand-ins for the native
+RDBMS tools, whose algorithms MADlib documents):
+
+* full-batch gradient descent — touches every tuple per step (the paper's
+  'traditional gradient method' contrast in Example 2.1);
+* IRLS (Newton) for LR — MADlib's LR solver, superlinear in the dimension;
+* ALS for LMF — alternating least squares, superlinear in #examples.
+
+These are the competitors for benchmarks/tasks_runtime.py (Fig. 7)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def full_batch_gd(task, data, *, steps: int, lr: float, rng=None, model=None):
+    """Plain gradient descent on the full objective."""
+    if model is None:
+        model = task.init_model(rng if rng is not None else jax.random.PRNGKey(0))
+    loss = lambda m: task.full_loss(m, data)
+    g = jax.jit(jax.grad(loss))
+    lj = jax.jit(loss)
+    losses = []
+
+    @jax.jit
+    def step(m):
+        return jax.tree.map(lambda p, gg: p - lr * gg, m, g(m))
+
+    for _ in range(steps):
+        model = step(model)
+        losses.append(float(lj(model)))
+    return model, losses
+
+
+def irls_logistic(data, *, steps: int = 20, ridge: float = 1e-6):
+    """Iteratively reweighted least squares for LR — Newton steps with an
+    O(d^3) solve per iteration (superlinear in dimension, like MADlib)."""
+    x, y01 = data["x"], (data["y"] > 0).astype(jnp.float32)
+    n, d = x.shape
+    w = jnp.zeros((d,), jnp.float32)
+
+    @jax.jit
+    def step(w):
+        p = jax.nn.sigmoid(x @ w)
+        s = p * (1.0 - p) + 1e-6
+        h = (x * s[:, None]).T @ x + ridge * jnp.eye(d)
+        g = x.T @ (p - y01)
+        return w - jnp.linalg.solve(h, g)
+
+    for _ in range(steps):
+        w = step(w)
+    return w
+
+
+def als_lmf(data, n_rows, n_cols, rank, *, sweeps: int = 10, mu: float = 1e-2, rng=None):
+    """Alternating least squares on the observed triples. Each sweep solves
+    a ridge system per row/col — O(#ratings * rank^2 + (m+n) rank^3)."""
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    kl, kr = jax.random.split(rng)
+    l = 0.1 * jax.random.normal(kl, (n_rows, rank))
+    r = 0.1 * jax.random.normal(kr, (n_cols, rank))
+    i, j, v = data["i"], data["j"], data["v"]
+    eye = jnp.eye(rank)
+
+    def solve_side(fixed, idx_other, idx_own, n_own):
+        f = fixed[idx_other]  # [nnz, rank]
+        # accumulate per-own-row normal equations with segment sums
+        outer = f[:, :, None] * f[:, None, :]
+        ata = jax.ops.segment_sum(outer, idx_own, n_own) + mu * eye
+        atb = jax.ops.segment_sum(f * v[:, None], idx_own, n_own)
+        return jnp.linalg.solve(ata, atb[..., None])[..., 0]
+
+    solve = jax.jit(solve_side, static_argnums=(3,))
+    for _ in range(sweeps):
+        l = solve(r, j, i, n_rows)
+        r = solve(l, i, j, n_cols)
+    return {"L": l, "R": r}

@@ -1,0 +1,117 @@
+"""Generalized linear tasks: LR, SVM, least squares (dense and sparse).
+
+Paper Fig. 4 — the transitions differ by a couple of lines:
+
+    LR :  w += alpha * y * sigmoid(-y w.x) * x
+    SVM:  w += alpha * y * x               if 1 - y w.x > 0
+
+Sparse variants take (idx, val) feature pairs (padded to fixed nnz, idx=-1
+padding); ``jax.grad`` through the gather produces true scatter-add sparse
+updates inside the fold — the RDBMS sparse-vector path."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.tasks.base import Task
+
+
+@dataclasses.dataclass(frozen=True)
+class LogisticRegression(Task):
+    dim: int
+    mu: float = 0.0  # L1 strength; applied via prox (igd.make_l1_prox)
+
+    def init_model(self, rng):
+        del rng
+        return jnp.zeros((self.dim,), jnp.float32)
+
+    def example_loss(self, w, ex):
+        margin = ex["y"] * jnp.dot(w, ex["x"])
+        # log(1 + exp(-m)) computed stably
+        return jnp.logaddexp(0.0, -margin)
+
+    def example_grad(self, w, ex):
+        # hand-written transition (paper Fig. 4, LR_Transition)
+        margin = ex["y"] * jnp.dot(w, ex["x"])
+        sig = jax.nn.sigmoid(-margin)
+        return (-ex["y"] * sig) * ex["x"]
+
+    def regularizer(self, w):
+        return self.mu * jnp.sum(jnp.abs(w))
+
+
+@dataclasses.dataclass(frozen=True)
+class SVM(Task):
+    dim: int
+    mu: float = 0.0
+
+    def init_model(self, rng):
+        del rng
+        return jnp.zeros((self.dim,), jnp.float32)
+
+    def example_loss(self, w, ex):
+        return jnp.maximum(1.0 - ex["y"] * jnp.dot(w, ex["x"]), 0.0)
+
+    def example_grad(self, w, ex):
+        # paper Fig. 4, SVM_Transition
+        active = 1.0 - ex["y"] * jnp.dot(w, ex["x"]) > 0
+        return jnp.where(active, -ex["y"], 0.0) * ex["x"]
+
+    def regularizer(self, w):
+        return self.mu * jnp.sum(jnp.abs(w))
+
+
+@dataclasses.dataclass(frozen=True)
+class LeastSquares(Task):
+    """0.5 (w.x - y)^2 — the CA-TX example's objective (paper Ex. 2.1)."""
+
+    dim: int
+
+    def init_model(self, rng):
+        del rng
+        return jnp.zeros((self.dim,), jnp.float32)
+
+    def example_loss(self, w, ex):
+        return 0.5 * (jnp.dot(w, ex["x"]) - ex["y"]) ** 2
+
+
+def _sparse_dot(w, idx, val):
+    safe = jnp.maximum(idx, 0)
+    gathered = jnp.take(w, safe) * (idx >= 0)
+    return jnp.sum(gathered * val)
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseLogisticRegression(Task):
+    dim: int
+    mu: float = 0.0
+
+    def init_model(self, rng):
+        del rng
+        return jnp.zeros((self.dim,), jnp.float32)
+
+    def example_loss(self, w, ex):
+        margin = ex["y"] * _sparse_dot(w, ex["idx"], ex["val"])
+        return jnp.logaddexp(0.0, -margin)
+
+    def regularizer(self, w):
+        return self.mu * jnp.sum(jnp.abs(w))
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseSVM(Task):
+    dim: int
+    mu: float = 0.0
+
+    def init_model(self, rng):
+        del rng
+        return jnp.zeros((self.dim,), jnp.float32)
+
+    def example_loss(self, w, ex):
+        return jnp.maximum(1.0 - ex["y"] * _sparse_dot(w, ex["idx"], ex["val"]), 0.0)
+
+    def regularizer(self, w):
+        return self.mu * jnp.sum(jnp.abs(w))

@@ -1,0 +1,48 @@
+"""Kalman-filter model fitting (paper Fig. 1B):
+
+    min_{w_1..w_T}  sum_t ||C w_t - f(y_t)||^2 + ||w_t - A w_{t-1}||^2
+
+The model is the whole state trajectory W [T, d]; one example is one time
+index t with its observation y_t. The t-th term's gradient touches rows
+t and t-1 only — another sparse-update task, like LMF."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.tasks.base import Task
+
+
+@dataclasses.dataclass(frozen=True)
+class KalmanFilterTask(Task):
+    horizon: int
+    state_dim: int
+    obs_dim: int
+    c_seed: int = 0
+    smooth_weight: float = 1.0
+
+    def _mats(self):
+        kc, ka = jax.random.split(jax.random.PRNGKey(self.c_seed))
+        c = jax.random.normal(kc, (self.obs_dim, self.state_dim)) / jnp.sqrt(
+            self.state_dim
+        )
+        a = jnp.eye(self.state_dim) + 0.05 * jax.random.normal(
+            ka, (self.state_dim, self.state_dim)
+        )
+        return c, a
+
+    def init_model(self, rng):
+        del rng
+        return jnp.zeros((self.horizon, self.state_dim), jnp.float32)
+
+    def example_loss(self, w, ex):
+        c, a = self._mats()
+        t = ex["t"]
+        wt = w[t]
+        wprev = jnp.where(t > 0, 1.0, 0.0)[..., None] * w[jnp.maximum(t - 1, 0)]
+        obs_err = c @ wt - ex["y"]
+        dyn_err = wt - a @ wprev
+        return jnp.sum(obs_err**2) + self.smooth_weight * jnp.sum(dyn_err**2)

@@ -1,0 +1,41 @@
+"""Portfolio optimization (paper Fig. 1B):
+
+    min_w  p^T w + w^T Sigma w   s.t.  w in simplex Delta
+
+With Sigma the sample covariance of centered return vectors r_i, the
+objective is linearly separable:  f_i(w) = p.w / N_scale + (w.(r_i - rbar))^2.
+The simplex constraint is enforced by the projection prox
+(``igd.make_simplex_prox``) after every IGD step — Appendix A's proximal
+point rule with P = indicator of Delta."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.tasks.base import Task
+
+
+@dataclasses.dataclass(frozen=True)
+class PortfolioOpt(Task):
+    n_assets: int
+    expected_returns: tuple  # p, length n_assets (negated returns = cost)
+    risk_weight: float = 1.0
+
+    def init_model(self, rng):
+        del rng
+        return jnp.ones((self.n_assets,), jnp.float32) / self.n_assets
+
+    def example_loss(self, w, ex):
+        # ex["r"]: centered return vector for one period
+        p = jnp.asarray(self.expected_returns, jnp.float32)
+        risk = self.risk_weight * jnp.dot(w, ex["r"]) ** 2
+        return jnp.dot(p, w) + risk
+
+    def full_loss(self, w, data):
+        p = jnp.asarray(self.expected_returns, jnp.float32)
+        n = data["r"].shape[0]
+        quad = self.risk_weight * jnp.sum((data["r"] @ w) ** 2)
+        return n * jnp.dot(p, w) + quad

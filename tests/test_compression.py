@@ -1,0 +1,53 @@
+"""Gradient compression: quantization error bounds + error feedback."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import compression as C
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(10, 600))
+@settings(max_examples=30, deadline=None)
+def test_int8_roundtrip_error_bound(seed, n):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,)) * 3.0
+    q, s = C.quantize_int8(x)
+    out = C.dequantize_int8(q, s, x.shape, x.dtype)
+    # per-block max error <= scale/2 = blockmax/254
+    err = np.abs(np.asarray(out) - np.asarray(x))
+    assert err.max() <= float(jnp.max(jnp.abs(x))) / 127.0 + 1e-6
+
+
+def test_bf16_roundtrip():
+    x = {"w": jnp.linspace(-1, 1, 100, dtype=jnp.float32)}
+    y = C.from_bf16(C.to_bf16(x), x)
+    assert y["w"].dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(y["w"]), np.asarray(x["w"]),
+                               atol=1e-2)
+
+
+def test_error_feedback_conserves_signal():
+    """q + residual == target exactly (the EF-SGD invariant)."""
+    g = {"w": jax.random.normal(jax.random.PRNGKey(0), (300,))}
+    r0 = jax.tree.map(jnp.zeros_like, g)
+    q_tree, r1 = C.ef_compress(g, r0)
+    q, s = q_tree["w"]
+    approx = C.dequantize_int8(q, s, g["w"].shape, g["w"].dtype)
+    np.testing.assert_allclose(
+        np.asarray(approx + r1["w"]), np.asarray(g["w"]), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_error_feedback_residual_shrinks_bias():
+    """Over repeated steps with constant gradient, EF keeps the average
+    applied update unbiased (residual stays bounded)."""
+    g = {"w": 0.01 * jnp.ones(256)}
+    r = jax.tree.map(jnp.zeros_like, g)
+    applied = jnp.zeros(256)
+    for _ in range(50):
+        q_tree, r = C.ef_compress(g, r)
+        q, s = q_tree["w"]
+        applied += C.dequantize_int8(q, s, (256,), jnp.float32)
+    mean_applied = np.asarray(applied) / 50
+    np.testing.assert_allclose(mean_applied, 0.01 * np.ones(256), rtol=0.05)

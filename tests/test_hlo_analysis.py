@@ -1,0 +1,91 @@
+"""HLO-analysis unit tests on hand-crafted module text: trip-count
+weighting, collective byte accounting, dot-flop computation."""
+
+from repro.launch import hlo_analysis as H
+
+SIMPLE = """\
+HloModule test, is_scheduled=true
+
+%cond.1 (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+%body.1 (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %ar = f32[8,8]{1,0} all-reduce(%x), replica_groups={}, to_apply=%add.1
+  %d = f32[8,8]{1,0} dot(%ar, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,8]) tuple(%ip, %d)
+}
+
+%add.1 (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (arg: f32[8,8]) -> (s32[], f32[8,8]) {
+  %arg = f32[8,8]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %ag = f32[16,8]{1,0} all-gather(%arg), dimensions={0}, replica_groups={}
+  %slice = f32[8,8]{1,0} slice(%ag), slice={[0:8], [0:8]}
+  %t0 = (s32[], f32[8,8]) tuple(%zero, %slice)
+  ROOT %w = (s32[], f32[8,8]) while(%t0), condition=%cond.1, body=%body.1
+}
+"""
+
+
+def test_trip_count_weighting():
+    st = H.analyze(SIMPLE)
+    # all-reduce of 8x8 f32 (256B) executes 5 times; all-gather (16x8=512B) once
+    ar = st.collectives_by_kind["all-reduce"]
+    ag = st.collectives_by_kind["all-gather"]
+    assert ar["count"] == 5
+    assert ar["bytes"] == 5 * 256
+    assert ag["count"] == 1
+    assert ag["bytes"] == 512
+    # traffic model: ar counts 2x
+    assert st.collective_traffic_bytes == 2 * 5 * 256 + 512
+
+
+def test_dot_flops_weighted():
+    st = H.analyze(SIMPLE)
+    # dot 8x8 @ 8x8 = 2*8*8*8 = 1024 flops, 5 iterations
+    assert st.flops == 5 * 1024
+    assert st.dot_count == 5
+
+
+def test_hbm_upper_counts_control_computations_only():
+    st = H.analyze(SIMPLE)
+    # entry: ag 512 + slice 256 ; body x5: ar 256 + dot 256 + add(s32) 4 ;
+    # cond x5: compare pred[] 1
+    expected = 2 * (512 + 256 + 5 * (256 + 256 + 4) + 5 * 1)
+    assert st.hbm_upper_bytes == expected
+
+
+def test_hbm_matmul_operand_model():
+    st = H.analyze(SIMPLE)
+    # dot operands+out: 3 * 256B, x5 iterations; collectives read+write:
+    # 2*(5*256 + 512)
+    expected = 5 * 3 * 256 + 2 * (5 * 256 + 512)
+    assert st.hbm_bytes == expected
+
+
+def test_shape_bytes_tuple():
+    assert H._shape_bytes("(f32[2,2], bf16[4])") == 16 + 8
+    assert H._shape_bytes("pred[]") == 1
+    assert H._shape_bytes("f32[]") == 4
+
+
+def test_roofline_terms_and_dominant():
+    t = H.roofline_terms(197e12, 819e9, 100e9)
+    assert abs(t["compute_s"] - 1.0) < 1e-9
+    assert abs(t["memory_s"] - 1.0) < 1e-9
+    assert abs(t["collective_s"] - 2.0) < 1e-9
+    assert H.dominant(t) == "collective"

@@ -1,0 +1,76 @@
+"""Unit + property tests for IGD step rules and proximal operators."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import igd
+
+vecs = st.lists(
+    st.floats(-100, 100, allow_nan=False, width=32), min_size=2, max_size=32
+)
+
+
+def test_step_size_rules():
+    c = igd.constant(0.5)
+    assert float(c(0)) == 0.5 and float(c(1000)) == 0.5
+    d = igd.diminishing(1.0, decay=10.0)
+    assert float(d(0)) == 1.0
+    assert abs(float(d(10)) - 0.5) < 1e-6  # 1 / (1 + 10/10)
+    g = igd.geometric(1.0, rho=0.5, decay=1.0)
+    assert abs(float(g(3)) - 0.125) < 1e-6
+
+
+@given(vecs, st.floats(0.001, 10.0))
+@settings(max_examples=50, deadline=None)
+def test_prox_l1_soft_threshold(v, t):
+    x = jnp.asarray(v, jnp.float32)
+    p = igd.prox_l1(x, t)
+    # shrinks toward zero by at most t, exact zero inside [-t, t]
+    assert np.all(np.abs(np.asarray(p)) <= np.maximum(np.abs(v) - t, 0) + 1e-4)
+    assert np.all(np.sign(np.asarray(p)) * np.sign(v) >= 0)
+
+
+@given(vecs)
+@settings(max_examples=50, deadline=None)
+def test_project_simplex_properties(v):
+    x = jnp.asarray(v, jnp.float32)
+    p = igd.project_simplex(x)
+    pn = np.asarray(p, np.float64)
+    assert pn.min() >= -1e-5  # nonnegative
+    assert abs(pn.sum() - 1.0) < 1e-3  # sums to one
+    # idempotent
+    p2 = igd.project_simplex(p)
+    np.testing.assert_allclose(np.asarray(p2), pn, atol=1e-4)
+
+
+@given(vecs)
+@settings(max_examples=50, deadline=None)
+def test_project_simplex_is_projection(v):
+    """The projection is the closest simplex point (vs random candidates)."""
+    x = np.asarray(v, np.float64)
+    p = np.asarray(igd.project_simplex(jnp.asarray(x, jnp.float32)), np.float64)
+    rng = np.random.default_rng(0)
+    for _ in range(16):
+        q = rng.dirichlet(np.ones(len(x)))
+        assert np.sum((x - p) ** 2) <= np.sum((x - q) ** 2) + 1e-3
+
+
+@given(vecs, st.floats(0.01, 5.0))
+@settings(max_examples=50, deadline=None)
+def test_project_l2_ball(v, r):
+    x = jnp.asarray(v, jnp.float32)
+    p = igd.project_l2_ball(x, r)
+    assert float(jnp.linalg.norm(p)) <= r * (1 + 1e-5)
+    if float(jnp.linalg.norm(x)) <= r:
+        np.testing.assert_allclose(np.asarray(p), v, rtol=1e-5, atol=1e-6)
+
+
+def test_igd_step_with_prox():
+    w = {"a": jnp.ones(3), "b": jnp.zeros(2)}
+    g = {"a": jnp.ones(3), "b": jnp.ones(2)}
+    out = igd.igd_step(w, g, 0.5, igd.make_l2_prox(1.0))
+    np.testing.assert_allclose(np.asarray(out["a"]), 0.5 / 1.5 * np.ones(3),
+                               rtol=1e-6)

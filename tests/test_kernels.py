@@ -1,0 +1,142 @@
+"""Per-kernel allclose sweeps (interpret mode) against the ref.py oracles,
+over shapes and dtypes, plus hypothesis property checks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.attention import ops as attn_ops
+from repro.kernels.decode import ops as dec_ops
+from repro.kernels.igd_fused import kernel as igd_kernel
+from repro.kernels.igd_fused import ops as igd_ops
+from repro.kernels.igd_fused import ref as igd_ref
+
+RNG = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# igd_fused
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("loss", ["lr", "svm", "lsq"])
+@pytest.mark.parametrize("n,d", [(256, 128), (512, 200), (256, 64)])
+def test_igd_fold_matches_ref(loss, n, d):
+    x = jax.random.normal(RNG, (n, d), jnp.float32) / jnp.sqrt(d)
+    y = jnp.sign(jax.random.normal(jax.random.fold_in(RNG, 1), (n,)))
+    alpha = 0.1 / (1.0 + jnp.arange(n, dtype=jnp.float32) / n)
+    w0 = 0.01 * jax.random.normal(jax.random.fold_in(RNG, 2), (d,))
+    wk = igd_ops.igd_fold(x, y, alpha, w0, loss=loss)
+    wr = igd_ref.igd_fold_ref(x, y, alpha, w0, loss=loss)
+    np.testing.assert_allclose(np.asarray(wk), np.asarray(wr),
+                               rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("loss", ["lr", "svm", "lsq"])
+def test_igd_minibatch_matches_ref(loss):
+    n, d = 512, 160
+    x = jax.random.normal(RNG, (n, d), jnp.float32) / jnp.sqrt(d)
+    y = jnp.sign(jax.random.normal(jax.random.fold_in(RNG, 1), (n,)))
+    alpha = 0.2 * jnp.ones((n,))
+    w0 = jnp.zeros((d,))
+    wk = igd_ops.igd_fold_minibatch(x, y, alpha, w0, loss=loss)
+    wr = igd_ref.igd_fold_minibatch_ref(x, y, alpha, w0, loss=loss,
+                                        tile=igd_kernel.TILE)
+    np.testing.assert_allclose(np.asarray(wk), np.asarray(wr),
+                               rtol=2e-4, atol=2e-5)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_igd_fold_property_random_seeds(seed):
+    rng = jax.random.PRNGKey(seed)
+    n, d = 256, 128
+    x = jax.random.normal(rng, (n, d)) / jnp.sqrt(d)
+    y = jnp.sign(jax.random.normal(jax.random.fold_in(rng, 1), (n,)))
+    alpha = 0.05 * jnp.ones((n,))
+    w0 = jnp.zeros((d,))
+    wk = igd_ops.igd_fold(x, y, alpha, w0, loss="lr")
+    wr = igd_ref.igd_fold_ref(x, y, alpha, w0, loss="lr")
+    np.testing.assert_allclose(np.asarray(wk), np.asarray(wr),
+                               rtol=2e-4, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,h,kv,hd", [
+    (2, 256, 4, 2, 64),
+    (1, 128, 4, 4, 128),
+    (2, 384, 6, 2, 32),
+])
+def test_flash_attention_matches_ref(b, s, h, kv, hd, dtype):
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd)).astype(dtype)
+    k = jax.random.normal(ks[1], (b, s, kv, hd)).astype(dtype)
+    v = jax.random.normal(ks[2], (b, s, kv, hd)).astype(dtype)
+    out_k = attn_ops.mha(q, k, v, use_kernel=True, interpret=True)
+    out_r = attn_ops.mha(q, k, v, use_kernel=False)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out_k, np.float32), np.asarray(out_r, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_flash_attention_is_causal():
+    """Perturbing future tokens must not change earlier outputs."""
+    b, s, h, kv, hd = 1, 256, 2, 2, 64
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, kv, hd))
+    v = jax.random.normal(ks[2], (b, s, kv, hd))
+    out1 = attn_ops.mha(q, k, v, use_kernel=True, interpret=True)
+    k2 = k.at[:, s // 2 :].set(0.0)
+    v2 = v.at[:, s // 2 :].set(0.0)
+    out2 = attn_ops.mha(q, k2, v2, use_kernel=True, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out1[:, : s // 2]), np.asarray(out2[:, : s // 2]),
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+# ---------------------------------------------------------------------------
+# flash decode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,kv,hd,s,length", [
+    (2, 4, 2, 64, 1024, 700),
+    (1, 8, 8, 128, 512, 512),
+    (4, 4, 1, 32, 2048, 1),
+])
+def test_flash_decode_matches_ref(b, h, kv, hd, s, length, dtype):
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (b, h, hd)).astype(dtype)
+    kc = jax.random.normal(ks[1], (b, s, kv, hd)).astype(dtype)
+    vc = jax.random.normal(ks[2], (b, s, kv, hd)).astype(dtype)
+    out_k = dec_ops.decode_attention(q, kc, vc, length, use_kernel=True,
+                                     interpret=True)
+    out_r = dec_ops.decode_attention(q, kc, vc, length, use_kernel=False)
+    tol = 5e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out_k, np.float32), np.asarray(out_r, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_flash_decode_ignores_cache_tail():
+    b, h, kv, hd, s = 1, 2, 2, 64, 1024
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (b, h, hd))
+    kc = jax.random.normal(ks[1], (b, s, kv, hd))
+    vc = jax.random.normal(ks[2], (b, s, kv, hd))
+    out1 = dec_ops.decode_attention(q, kc, vc, 300, use_kernel=True)
+    kc2 = kc.at[:, 300:].set(99.0)
+    vc2 = vc.at[:, 300:].set(-99.0)
+    out2 = dec_ops.decode_attention(q, kc2, vc2, 300, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=1e-6, atol=1e-7)

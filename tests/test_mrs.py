@@ -1,0 +1,70 @@
+"""Multiplexed Reservoir Sampling (paper §3.4 / Fig. 10)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro import tasks
+from repro.core import igd, mrs, uda
+from repro.data import synthetic
+
+RNG = jax.random.PRNGKey(0)
+
+
+def test_reservoir_is_approximately_uniform():
+    """Each of n items should land in the final buffer w.p. B/n."""
+    n, b, trials = 64, 16, 400
+    counts = np.zeros(n)
+    data = {"v": jnp.arange(n, dtype=jnp.int32)}
+    for t in range(trials):
+        buf = mrs.reservoir_sample(data, b, jax.random.PRNGKey(t))
+        counts[np.asarray(buf["v"])] += 1
+    freq = counts / trials
+    expected = b / n
+    # tolerance ~4 sigma of a binomial estimate
+    sigma = np.sqrt(expected * (1 - expected) / trials)
+    assert np.all(np.abs(freq - expected) < 5 * sigma + 0.02), freq
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_reservoir_step_keeps_buffer_valid(seed):
+    key = jax.random.PRNGKey(seed)
+    buf = {"v": jnp.zeros(4, jnp.int32)}
+    seen = 0
+    for i in range(12):
+        buf, dropped = mrs.reservoir_step(
+            buf, jnp.int32(seen), {"v": jnp.int32(i + 1)},
+            jax.random.fold_in(key, i),
+        )
+        seen += 1
+        # dropped is either the incoming item or a previous buffer entry
+        assert 0 <= int(dropped["v"]) <= i + 1
+    assert np.all(np.asarray(buf["v"]) >= 0)
+
+
+def test_mrs_beats_subsampling_on_clustered_data():
+    """Fig. 10: MRS reaches a lower objective than pure subsampling for the
+    same buffer and epochs, on clustered data without any shuffle."""
+    data = synthetic.dense_classification(RNG, 1000, 20)  # clustered
+    task = tasks.LogisticRegression(dim=20)
+    agg = uda.IGDAggregate(task, igd.diminishing(0.5, decay=1000))
+    cfg = mrs.MRSConfig(buffer_size=100, ratio=1)
+    _, mrs_losses = mrs.run_mrs(agg, data, rng=RNG, epochs=4, cfg=cfg,
+                                loss_fn=task.full_loss)
+    buf = mrs.reservoir_sample(data, 100, RNG)
+    res = uda.run_igd(agg, buf, rng=RNG, epochs=4)
+    sub_loss = float(task.full_loss(res.model, data))
+    assert mrs_losses[-1] < sub_loss
+
+
+def test_mrs_beats_clustered_per_epoch():
+    data = synthetic.dense_classification(RNG, 1000, 20)
+    task = tasks.LogisticRegression(dim=20)
+    agg = uda.IGDAggregate(task, igd.diminishing(0.5, decay=1000))
+    cfg = mrs.MRSConfig(buffer_size=100, ratio=1)
+    _, mrs_losses = mrs.run_mrs(agg, data, rng=RNG, epochs=4, cfg=cfg,
+                                loss_fn=task.full_loss)
+    res = uda.run_igd(agg, data, rng=RNG, epochs=4, loss_fn=task.full_loss)
+    assert mrs_losses[-1] < res.losses[-1]

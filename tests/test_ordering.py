@@ -1,0 +1,64 @@
+"""Data-ordering study (paper §3.2): CA-TX closed form, policy behavior."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import tasks
+from repro.core import igd, ordering, uda
+
+RNG = jax.random.PRNGKey(0)
+
+
+def test_catx_closed_form_matches_empirical():
+    """Appendix C: clustered order after one epoch matches the closed form."""
+    n = 200
+    alpha = 0.05
+    data = ordering.make_catx_dataset(n)
+    task = tasks.LeastSquares(dim=1)
+    agg = uda.IGDAggregate(task, igd.constant(alpha))
+    w0 = 0.3
+    state = uda.IGDState(jnp.array([w0]), jnp.int32(0), jnp.float32(0))
+    out = uda.fold(agg, state, data)
+    expect = ordering.catx_closed_form(w0, alpha, n)
+    np.testing.assert_allclose(float(out.model[0]), expect, rtol=1e-4)
+
+
+def test_catx_clustered_vs_shuffled():
+    """Clustered order oscillates toward -1; shuffled converges near 0."""
+    n = 500
+    data = ordering.make_catx_dataset(n)
+    task = tasks.LeastSquares(dim=1)
+    agg = uda.IGDAggregate(task, igd.diminishing(0.2, decay=200))
+    res_c = uda.run_igd(agg, data, rng=RNG, epochs=5)
+    res_s = uda.run_igd(
+        agg, data, rng=RNG, epochs=5, ordering=ordering.ShuffleOnce()
+    )
+    assert abs(float(res_s.model[0])) < 0.1
+    assert abs(float(res_c.model[0])) > 0.5  # pathological
+
+
+def test_shuffle_once_is_fixed_across_epochs():
+    data = {"x": jnp.arange(16.0)[:, None], "y": jnp.arange(16.0)}
+    pol = ordering.ShuffleOnce()
+    rng = RNG
+    e1, rng = pol.order(data, 16, 1, rng)
+    e2, rng = pol.order(data, 16, 2, rng)
+    np.testing.assert_array_equal(np.asarray(e1["y"]), np.asarray(e2["y"]))
+    assert not np.array_equal(np.asarray(e1["y"]), np.arange(16.0))
+
+
+def test_shuffle_always_changes_across_epochs():
+    data = {"x": jnp.arange(64.0)[:, None], "y": jnp.arange(64.0)}
+    pol = ordering.ShuffleAlways()
+    rng = RNG
+    e1, rng = pol.order(data, 64, 1, rng)
+    e2, rng = pol.order(data, 64, 2, rng)
+    assert not np.array_equal(np.asarray(e1["y"]), np.asarray(e2["y"]))
+
+
+def test_cluster_by_label():
+    y = jnp.array([-1.0, 1.0, -1.0, 1.0])
+    data = {"x": jnp.arange(4.0)[:, None], "y": y}
+    c = ordering.cluster_by_label(data, y)
+    np.testing.assert_array_equal(np.asarray(c["y"]), [1, 1, -1, -1])
