@@ -1,23 +1,12 @@
-"""Shared benchmark utilities: timing + CSV rows."""
+"""Shared benchmark utilities: timing + CSV rows.
+
+``time_call`` is the engine's micro-probe timing primitive
+(``repro.engine.probes``) — the planner's calibration and the benchmark
+tables share one measurement methodology."""
 
 from __future__ import annotations
 
-import time
-
-import jax
-
-
-def time_call(fn, *args, warmup: int = 1, iters: int = 3) -> float:
-    """Median wall time (seconds) of fn(*args) with block_until_ready."""
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    times = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        times.append(time.perf_counter() - t0)
-    times.sort()
-    return times[len(times) // 2]
+from repro.engine.probes import time_call  # noqa: F401
 
 
 def row(name: str, seconds: float, derived: str) -> str:

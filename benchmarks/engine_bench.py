@@ -1,0 +1,63 @@
+"""Engine smoke benchmark: query -> plan -> execute, cold vs cache-warm.
+
+The serving-path numbers the engine exists for: repeated identical
+queries must skip planning probes AND XLA compilation (compiled-plan
+cache), and the planner's choice must beat the pathological forced plan
+on clustered data. Designed to finish in ~10 s (scripts/check.sh runs it
+as the post-test smoke)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import row
+from repro import engine
+from repro.core import ordering
+from repro.data import synthetic
+
+RNG = jax.random.PRNGKey(7)
+
+
+def run(quick: bool = True):
+    rows = []
+    n = 2048 if quick else 16384
+    eng = engine.Engine()  # isolated cache so cold/warm split is honest
+
+    data = synthetic.dense_classification(RNG, n, 32)
+    q = engine.AnalyticsQuery(
+        task="logreg", data=data, task_args={"dim": 32},
+        epochs=5, tolerance=0.0,
+    )
+
+    t0 = time.perf_counter()
+    res_cold = eng.run(q)
+    t_cold = time.perf_counter() - t0
+    rows.append(row("engine_query_cold", t_cold,
+                    f"epochs={res_cold.epochs};traces={res_cold.trace_count}"))
+
+    t0 = time.perf_counter()
+    res_warm = eng.run(q)
+    t_warm = time.perf_counter() - t0
+    hit = eng.cache_info()["plan_cache_hits"] >= 1
+    retraced = res_warm.trace_count != res_cold.trace_count
+    rows.append(row("engine_query_warm", t_warm,
+                    f"cache_hit={hit};retraced={retraced}"))
+
+    # planner vs forced-clustered on the CA-TX pathology
+    catx = ordering.make_catx_dataset(n // 2)
+    qc = engine.AnalyticsQuery(
+        task="least_squares", data=catx, task_args={"dim": 1},
+        epochs=12, tolerance=1e-3,
+    )
+    planned = eng.run(qc)
+    forced = eng.run(qc, plan=engine.Plan("clustered", "serial"))
+    rows.append(row(
+        "engine_planner_vs_clustered",
+        planned.gradient_seconds,
+        f"planned_epochs={planned.epochs};clustered_epochs={forced.epochs};"
+        f"planned_loss={planned.losses[-1]:.4f};"
+        f"clustered_loss={forced.losses[-1]:.4f}",
+    ))
+    return rows

@@ -1,24 +1,41 @@
 """Benchmark harness entry point — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV. ``--full`` uses paper-scale sizes;
-the default is container-sized. Individual suites: ``--only fig7``."""
+Prints ``name,us_per_call,derived`` CSV. ``--full`` uses paper-scale
+sizes; the default is container-sized. Individual suites: ``--only
+fig7``. ``--json [DIR]`` additionally writes one machine-readable
+``BENCH_<suite>.json`` per suite (the cross-PR perf trajectory)."""
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
+import time
 import traceback
+
+
+def _parse_row(line: str) -> dict:
+    name, us, derived = line.split(",", 2)
+    return {"name": name, "us_per_call": float(us), "derived": derived}
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument(
+        "--json", nargs="?", const=".", default=None, metavar="DIR",
+        help="write BENCH_<suite>.json files to DIR (default: cwd)",
+    )
     args = ap.parse_args()
     quick = not args.full
+    if args.json is not None:
+        os.makedirs(args.json, exist_ok=True)
 
     from benchmarks import (
         catx,
+        engine_bench,
         mrs_bench,
         ordering_bench,
         overhead,
@@ -37,19 +54,42 @@ def main() -> None:
         "fig10": mrs_bench,  # Fig 10
         "table4": scalability,  # Table 4
         "roofline": roofline,  # framework roofline (§Roofline)
+        "engine": engine_bench,  # repro.engine smoke (plan + cache)
     }
+    if args.only and args.only not in suites:
+        raise SystemExit(
+            f"unknown suite {args.only!r}; have {sorted(suites)}"
+        )
     print("name,us_per_call,derived")
     failed = 0
     for name, mod in suites.items():
         if args.only and args.only != name:
             continue
+        t0 = time.time()
+        lines = []
+        err = None
         try:
             for line in mod.run(quick=quick):
                 print(line)
+                lines.append(line)
         except Exception as e:  # noqa: BLE001
             failed += 1
-            print(f"{name}_FAILED,0,{type(e).__name__}:{e}")
+            err = f"{type(e).__name__}: {e}"
+            print(f"{name}_FAILED,0,{err}")
             traceback.print_exc(file=sys.stderr)
+        if args.json is not None:
+            record = {
+                "suite": name,
+                "quick": quick,
+                "wall_seconds": round(time.time() - t0, 3),
+                "rows": [_parse_row(x) for x in lines],
+            }
+            if err:
+                record["error"] = err
+            path = os.path.join(args.json, f"BENCH_{name}.json")
+            with open(path, "w") as f:
+                json.dump(record, f, indent=1)
+            print(f"# wrote {path}", file=sys.stderr)
     if failed:
         raise SystemExit(f"{failed} suites failed")
 

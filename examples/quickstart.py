@@ -1,55 +1,62 @@
 """Quickstart: the paper's headline example — train an SVM (and an LR) on a
-labeled table with ONE engine and ~10 lines of task code.
+labeled table with ONE engine, stating only WHAT to compute.
 
     PYTHONPATH=src python examples/quickstart.py
 
 Mirrors the SQL interface:  SELECT SVMTrain('myModel', 'LabeledPapers', ...)
+
+The engine plans the physical execution (data ordering, parallelism,
+buffering) from table statistics and micro-probe calibration; run with
+``--explain`` to see the chosen plan and every rejected candidate.
 """
+
+import sys
 
 import jax
 
-from repro import tasks
-from repro.core import convergence, igd, ordering, uda
-from repro.data import synthetic
-
-
-def svm_train(data, dim: int, epochs: int = 10):
-    """The Bismarck 'SVMTrain' UDA: shuffle-once + IGD fold + convergence."""
-    task = tasks.SVM(dim=dim, mu=1e-4)
-    agg = uda.IGDAggregate(
-        task,
-        igd.diminishing(0.2, decay=len(data["y"])),
-        prox=igd.make_l1_prox(1e-4),
-    )
-    return uda.run_igd(
-        agg, data,
-        rng=jax.random.PRNGKey(0),
-        epochs=epochs,
-        ordering=ordering.ShuffleOnce(),
-        loss_fn=task.full_loss,
-        stop=convergence.RelativeLossDrop(1e-3),
-    )
+from repro import engine
 
 
 def main():
     rng = jax.random.PRNGKey(42)
+    from repro.data import synthetic
+
     labeled_papers = synthetic.dense_classification(rng, 4096, 64)
 
-    res = svm_train(labeled_papers, dim=64)
+    # SELECT SVMTrain('myModel', 'LabeledPapers', tolerance => 1e-3)
+    query = engine.AnalyticsQuery(
+        task="svm",
+        data=labeled_papers,
+        task_args={"dim": 64, "mu": 1e-4},
+        epochs=10,
+        tolerance=1e-3,
+    )
+    if "--explain" in sys.argv:
+        print(engine.explain(query).describe())
+        print()
+    res = engine.run(query)
     pred = jax.numpy.sign(labeled_papers["x"] @ res.model)
     acc = float(jax.numpy.mean(pred == labeled_papers["y"]))
     print(f"SVM: {res.epochs} epochs, loss {res.losses[-1]:.4f}, "
-          f"train acc {acc:.3f}")
+          f"train acc {acc:.3f}   [{res.plan.describe()}]")
     print(f"     shuffle {res.shuffle_seconds*1e3:.1f} ms, "
           f"gradients {res.gradient_seconds*1e3:.1f} ms")
 
-    # the SAME engine runs logistic regression — only the task changes
-    task = tasks.LogisticRegression(dim=64)
-    agg = uda.IGDAggregate(task, igd.diminishing(0.5, decay=4096))
-    res2 = uda.run_igd(agg, labeled_papers, rng=rng, epochs=10,
-                       ordering=ordering.ShuffleOnce(),
-                       loss_fn=task.full_loss)
+    # the SAME engine runs logistic regression — only the task name changes
+    res2 = engine.run(
+        engine.AnalyticsQuery(
+            task="logreg",
+            data=labeled_papers,
+            task_args={"dim": 64},
+            epochs=10,
+            tolerance=1e-3,
+        )
+    )
     print(f"LR : {res2.epochs} epochs, loss {res2.losses[-1]:.4f}")
+
+    # a repeated query is served from the compiled-plan cache
+    engine.run(query)
+    print(f"cache: {engine.cache_info()}")
 
 
 if __name__ == "__main__":

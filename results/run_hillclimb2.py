@@ -4,9 +4,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 """Hillclimb round 2: forced bf16 pre-gather casts (sharding-constrained),
 composed with the round-1 survivors."""
 
-import json
 import sys
-import traceback
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -31,26 +29,13 @@ VARIANTS = [
 
 
 def main():
+    from repro.engine import sweep as sweep_lib
+
     only = sys.argv[1] if len(sys.argv) > 1 else None
-    with open(OUT, "a") as f:
-        for arch, shape, kw, overrides, tag in VARIANTS:
-            if only and only not in tag:
-                continue
-            try:
-                rec = run_cell(arch, shape, False, cfg_overrides=overrides,
-                               tag=tag, **kw)
-            except Exception as e:  # noqa: BLE001
-                rec = {"arch": arch, "shape": shape, "tag": tag,
-                       "status": "FAIL",
-                       "error": f"{type(e).__name__}: {e}",
-                       "traceback": traceback.format_exc()[-1500:]}
-            f.write(json.dumps(rec) + "\n")
-            f.flush()
-            print(tag, rec.get("status"),
-                  "coll", round((rec.get("collective_traffic_bytes") or 0) / 50e9, 1),
-                  "mem", round((rec.get("hlo_hbm_bytes") or 0) / 819e9, 1),
-                  "comp", round((rec.get("hlo_flops") or 0) / 197e12, 1),
-                  "temp_gb", round((rec.get("temp_bytes") or 0) / 2**30, 1))
+    sweep_lib.sweep(
+        lambda arch, shape, **kw: run_cell(arch, shape, False, **kw),
+        VARIANTS, OUT, only=only, summarize=sweep_lib.roofline_summary,
+    )
 
 
 if __name__ == "__main__":

@@ -2,8 +2,10 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 """Hillclimb round 4: bf16-compressed gradient reductions (the remaining
 big f32 collective after weight gathers went bf16)."""
-import json, sys, traceback
+import functools
+import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.engine import sweep as sweep_lib
 from repro.launch.dryrun import run_cell
 
 OUT = os.path.join(os.path.dirname(__file__), "hillclimb.jsonl")
@@ -18,17 +20,8 @@ VARIANTS = [
      dict(seq_shard=True, grad_accum=2, compress_grads=True), None,
      "N9-compress-grads"),
 ]
-with open(OUT, "a") as f:
-    for arch, shape, kw, overrides, tag in VARIANTS:
-        try:
-            rec = run_cell(arch, shape, False, cfg_overrides=overrides, tag=tag, **kw)
-        except Exception as e:
-            rec = {"arch": arch, "shape": shape, "tag": tag, "status": "FAIL",
-                   "error": f"{type(e).__name__}: {e}",
-                   "traceback": traceback.format_exc()[-1500:]}
-        f.write(json.dumps(rec) + "\n"); f.flush()
-        print(tag, rec.get("status"),
-              "coll", round((rec.get("collective_traffic_bytes_proj") or 0)/50e9, 1),
-              "mem", round((rec.get("hlo_hbm_bytes_proj") or 0)/819e9, 1),
-              "comp", round((rec.get("hlo_flops") or 0)/197e12, 1),
-              "temp_gb", round((rec.get("temp_bytes") or 0)/2**30, 1))
+sweep_lib.sweep(
+    lambda arch, shape, **kw: run_cell(arch, shape, False, **kw),
+    VARIANTS, OUT,
+    summarize=functools.partial(sweep_lib.roofline_summary, projected=True),
+)

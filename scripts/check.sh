@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Tier-1 verification: the full test suite plus a ~10-second engine smoke
+# benchmark (plan choice + compiled-plan cache). Run from the repo root:
+#
+#   scripts/check.sh            # tests + engine smoke
+#   scripts/check.sh --fast     # tests only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+if [[ "${1:-}" != "--fast" ]]; then
+  echo "== engine smoke benchmark =="
+  python -m benchmarks.run --only engine --json .
+fi
+
+echo "CHECK OK"

@@ -1,0 +1,45 @@
+"""Forward-compat shims: newer JAX mesh APIs on the pinned jax version.
+
+The repo (and its tests) target the post-0.5 mesh API where
+``jax.make_mesh`` accepts ``axis_types=(jax.sharding.AxisType.Auto, ...)``.
+The container pins an older jax that predates ``AxisType``; every mesh in
+this codebase is Auto-typed anyway (GSPMD propagation), so on old jax the
+kwarg is accepted and dropped. No-op on new jax.
+"""
+
+from __future__ import annotations
+
+import enum
+import functools
+
+import jax
+
+
+def install() -> None:
+    if hasattr(jax.sharding, "AxisType"):
+        return
+
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = AxisType
+
+    _orig_make_mesh = jax.make_mesh
+
+    @functools.wraps(_orig_make_mesh)
+    def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+        if axis_types is not None:
+            bad = [t for t in axis_types if t is not AxisType.Auto]
+            if bad:
+                raise NotImplementedError(
+                    f"axis_types {bad} need a newer jax; only Auto is "
+                    "emulated on this version"
+                )
+        return _orig_make_mesh(axis_shapes, axis_names, devices=devices)
+
+    jax.make_mesh = make_mesh
+
+
+install()

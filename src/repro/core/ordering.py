@@ -47,20 +47,37 @@ class ShuffleAlways:
         return _permute(data, perm), rng
 
 
+def _data_key(data, n: int):
+    """Identity key for a dataset pytree: leaf object ids + shapes/dtypes.
+
+    Object ids catch "same shape, different table" (jax arrays are
+    immutable, so a live leaf with the same id IS the same data); shapes
+    catch id reuse after the original was freed."""
+    leaves = jax.tree.leaves(data)
+    return (n,) + tuple((id(x), getattr(x, "shape", None), str(getattr(x, "dtype", ""))) for x in leaves)
+
+
 @dataclasses.dataclass
 class ShuffleOnce:
     """The paper's contribution: permute once, before the first epoch, and
-    reuse that order for every pass (no per-epoch reshuffle cost)."""
+    reuse that order for every pass (no per-epoch reshuffle cost).
+
+    The cached permuted dataset is keyed on the *incoming data's* identity
+    so calling the same policy object with a different table reshuffles
+    instead of silently returning the previous table's rows."""
 
     name: str = "shuffle_once"
     _cache: object = dataclasses.field(default=None, repr=False)
+    _cache_key: object = dataclasses.field(default=None, repr=False)
 
     def order(self, data, n, epoch, rng):
         del epoch
-        if self._cache is None:
+        key = _data_key(data, n)
+        if self._cache is None or self._cache_key != key:
             rng, sub = jax.random.split(rng)
             perm = jax.random.permutation(sub, n)
             self._cache = _permute(data, perm)
+            self._cache_key = key
         return self._cache, rng
 
 

@@ -14,6 +14,7 @@ exactly the UDA's data-access pattern.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Any, Callable, Generic, NamedTuple, Optional, TypeVar
 
@@ -128,7 +129,7 @@ def fold(uda: UDA, state, examples, unroll: int = 1):
 def fold_jit(uda: UDA):
     """A jitted fold with donated state (the aggregate runs in place)."""
 
-    @jax.jit
+    @functools.partial(jax.jit, donate_argnums=(0,))
     def run(state, examples):
         return fold(uda, state, examples)
 
@@ -151,12 +152,6 @@ def segmented_fold(uda: UDA, state, examples, num_segments: int):
         examples,
     )
     states = jax.vmap(lambda ex: fold(uda, state, ex))(seg)
-
-    # tree-reduce the partial states with merge
-    def merge_slice(ss, i, j):
-        a = jax.tree.map(lambda x: x[i], ss)
-        b = jax.tree.map(lambda x: x[j], ss)
-        return uda.merge(a, b)
 
     merged = jax.tree.map(lambda x: x[0], states)
     for i in range(1, num_segments):

@@ -1,0 +1,4 @@
+"""Distribution layer: partition-spec derivation, activation-sharding
+constraints, and cross-shard collectives for the LM substrate."""
+
+from repro.dist import collectives, sharding  # noqa: F401

@@ -1,0 +1,207 @@
+"""Partition-spec derivation and activation sharding constraints.
+
+One policy, applied uniformly (DESIGN.md §4):
+
+* **Parameters** — megatron-style tensor parallelism over the "model" axis
+  on the last dim, FSDP over the "data" axis on the second-to-last dim.
+  Leading stack dims (the ``lax.scan``-folded layer axis) stay replicated.
+  A dim is sharded only when its size divides the axis size, so the same
+  code serves the 512-chip production mesh and a 2x4 host mesh.
+* **Batches** — leading batch dim over every data-parallel axis present
+  ("pod" then "data").
+* **Decode caches** — batch dim over the data axes; the cache length dim
+  is length-sharded over "model" (each shard scans its KV slice; see
+  ``repro.dist.collectives.flash_decode_combine``).
+* **Activations** — ``constrain(x, kind)`` pins residual/logit layouts via
+  ``with_sharding_constraint``; a no-op until ``set_activation_ctx`` has
+  installed a mesh (single-device paths never pay for it).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# Minimum cache-length extent worth length-sharding (below this the
+# per-shard combine overhead dominates the cache read).
+_MIN_LENGTH_SHARD = 512
+
+
+# ---------------------------------------------------------------------------
+# activation context
+# ---------------------------------------------------------------------------
+
+_CTX: dict = {"mesh": None, "seq_shard": False}
+
+
+def set_activation_ctx(mesh, *, seq_shard: bool = False) -> None:
+    """Install (or clear, with ``mesh=None``) the mesh used by
+    ``constrain``. Process-global by design: model code stays mesh-free."""
+    _CTX["mesh"] = mesh
+    _CTX["seq_shard"] = bool(seq_shard)
+
+
+def _data_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _axis_size(mesh, axes) -> int:
+    if not axes:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def _div(dim: int, mesh, axes) -> bool:
+    size = _axis_size(mesh, axes)
+    return size > 1 and dim % size == 0
+
+
+def constrain(x: jax.Array, kind: str) -> jax.Array:
+    """Constrain an activation's layout. ``kind``:
+
+    * ``"resid"``  — [B, S, D]: batch over data axes; S over "model" when
+      the context was installed with ``seq_shard=True`` (sequence
+      parallelism for the norm/elementwise segments);
+    * ``"logits"`` — [B, S, V]: batch over data axes, vocab over "model".
+    """
+    mesh = _CTX["mesh"]
+    if mesh is None or x.ndim < 3:
+        return x
+    data = _data_axes(mesh)
+    dims: list = [None] * x.ndim
+    if data and _div(x.shape[0], mesh, data):
+        dims[0] = data if len(data) > 1 else data[0]
+    if kind == "logits":
+        if _div(x.shape[-1], mesh, "model"):
+            dims[-1] = "model"
+    elif kind == "resid":
+        if _CTX["seq_shard"] and _div(x.shape[1], mesh, "model"):
+            dims[1] = "model"
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*dims))
+    )
+
+
+# ---------------------------------------------------------------------------
+# partition specs
+# ---------------------------------------------------------------------------
+
+
+def param_specs(params, cfg, mesh):
+    """PartitionSpec pytree for an ``lm.init_lm`` param tree (or any param
+    tree of the same conventions: trailing two dims are (in, out)).
+
+    Two guards on the generic trailing-dims rule:
+
+    * a dim is sharded only when it is at least twice the axis size —
+      tiny dims gain nothing, and this keeps the leading layer-stack dim
+      of stacked-vector leaves (e.g. a [n_layers, d] norm weight) off
+      the mesh (the ``lax.scan``-over-layers axis must never be sharded);
+    * q/k/v projections are tensor-parallel only along HEAD boundaries:
+      the "model" axis must divide ``n_kv_heads`` (GQA: then also
+      ``n_heads``), else a shard would own a fraction of a head and the
+      head-dim reshape/RoPE-split no longer lines up with the layout.
+    """
+    has_model = "model" in mesh.shape
+    has_data = "data" in mesh.shape
+    msize = _axis_size(mesh, "model") if has_model else 1
+    kv_heads = getattr(cfg, "n_kv_heads", 0) if cfg is not None else 0
+    heads_splittable = msize <= 1 or not kv_heads or kv_heads % msize == 0
+
+    def worth(dim: int, axis: str) -> bool:
+        return _div(dim, mesh, axis) and dim >= 2 * _axis_size(mesh, axis)
+
+    def spec(path, leaf) -> P:
+        shape = leaf.shape
+        if len(shape) < 2:
+            return P()
+        name = path[-1].key if hasattr(path[-1], "key") else ""
+        dims: list = [None] * len(shape)
+        head_split = name in ("wq", "wk", "wv")
+        if has_model and worth(shape[-1], "model") and (
+            not head_split or heads_splittable
+        ):
+            dims[-1] = "model"
+        if has_data and worth(shape[-2], "data"):
+            dims[-2] = "data"
+        return P(*dims)
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def batch_specs(cfg, kind: str, mesh, global_batch: int) -> dict:
+    """PartitionSpec dict for a (train|prefill|decode) input batch."""
+    data = _data_axes(mesh)
+    batch_axes: Any = None
+    if data and global_batch % _axis_size(mesh, data) == 0:
+        batch_axes = data if len(data) > 1 else data[0]
+    specs = {"tokens": P(batch_axes, None)}
+    if kind in ("train", "prefill") and getattr(cfg, "n_prefix", 0):
+        specs["prefix_embeds"] = P(batch_axes, None, None)
+    return specs
+
+
+def cache_specs(cfg, mesh, global_batch: int, cache_abs) -> dict:
+    """PartitionSpec pytree for a decode cache (``lm.init_cache`` layout).
+
+    Cache leaves carry leading layer-stack dims, then the batch dim, then
+    (for KV caches) the cache length dim. The batch dim is recognized by
+    size; the following dim is length-sharded over "model" when long
+    enough and divisible."""
+    del cfg
+    data = _data_axes(mesh)
+    batch_axes: Any = None
+    if data and global_batch % _axis_size(mesh, data) == 0:
+        batch_axes = data if len(data) > 1 else data[0]
+    has_model = "model" in mesh.shape
+
+    def spec(leaf) -> P:
+        dims: list = [None] * leaf.ndim
+        for i, d in enumerate(leaf.shape):
+            if d == global_batch:
+                dims[i] = batch_axes
+                j = i + 1
+                if (
+                    has_model
+                    and j < leaf.ndim
+                    and leaf.shape[j] >= _MIN_LENGTH_SHARD
+                    and _div(leaf.shape[j], mesh, "model")
+                ):
+                    dims[j] = "model"
+                break
+        return P(*dims)
+
+    return jax.tree.map(spec, cache_abs)
+
+
+# ---------------------------------------------------------------------------
+# spec -> sharding / abstract-value helpers
+# ---------------------------------------------------------------------------
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, P)
+
+
+def shardings(specs, mesh):
+    """Map a PartitionSpec pytree to NamedShardings on ``mesh``."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs, is_leaf=_is_spec
+    )
+
+
+def abstract_with_sharding(abs_tree, specs, mesh):
+    """ShapeDtypeStructs carrying shardings — dry-run inputs that compile
+    on the production mesh with zero device allocation."""
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(
+            a.shape, a.dtype, sharding=NamedSharding(mesh, s)
+        ),
+        abs_tree,
+        specs,
+    )

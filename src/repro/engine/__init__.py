@@ -1,0 +1,39 @@
+"""repro.engine — the unified in-RDBMS analytics engine (the paper's
+"RDBMS layer"): task catalog, declarative queries, cost-based physical
+planning, and compiled-plan-cached execution.
+
+Typical use::
+
+    from repro import engine
+
+    res = engine.run(engine.AnalyticsQuery(task="logreg", data=table,
+                                           task_args={"dim": 64}))
+    print(res.describe())
+
+New techniques register through the catalog (see ENGINE.md)::
+
+    @engine.register_task("mytask")
+    class MyTask(Task): ...
+"""
+
+from repro.engine.catalog import TaskSpec, get, names, register_task, unregister  # noqa: F401
+from repro.engine.executor import CompiledPlan, Engine, EngineResult  # noqa: F401
+from repro.engine.planner import Plan, PlanReport, label_clusteredness  # noqa: F401
+from repro.engine.query import AnalyticsQuery  # noqa: F401
+from repro.engine import probes, sweep  # noqa: F401
+
+# The default process-wide engine: callers share one compiled-plan cache,
+# which is the point (repeat queries hit compiled plans).
+DEFAULT = Engine()
+
+
+def run(query: AnalyticsQuery, *, plan=None) -> EngineResult:
+    return DEFAULT.run(query, plan=plan)
+
+
+def explain(query: AnalyticsQuery) -> PlanReport:
+    return DEFAULT.explain(query)
+
+
+def cache_info() -> dict:
+    return DEFAULT.cache_info()

@@ -1,0 +1,305 @@
+"""Plan execution behind a compiled-plan cache.
+
+The executor lowers a chosen ``Plan`` onto the existing drivers
+(``uda.fold`` / ``uda.segmented_fold`` / ``parallel.hogwild_fold`` /
+``mrs.mrs_epoch``) as ONE jitted epoch function, and memoizes that
+compiled executable keyed by (task, task_args, table signature, plan).
+Serving many analytics queries per second means the same (task, shape)
+pair arrives over and over; a cache hit skips tracing AND XLA compilation
+entirely — the epoch function object is reused, so jax's own jit cache
+is hit by construction. ``trace_count`` on each executable counts actual
+retraces, which the cache test pins to zero across repeated queries.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import convergence, mrs as mrs_lib, ordering as ordering_lib
+from repro.core import parallel as parallel_lib, uda as uda_lib
+from repro.engine import catalog, planner as planner_lib
+from repro.engine.query import AnalyticsQuery
+
+_ORDERINGS = {
+    "clustered": ordering_lib.Clustered,
+    "shuffle_once": ordering_lib.ShuffleOnce,
+    "shuffle_always": ordering_lib.ShuffleAlways,
+}
+
+
+def _counted_jit(fn, counter: Dict[str, int], **jit_kw):
+    """jit(fn) that bumps ``counter['traces']`` on every retrace — the
+    observable for 'repeat query compiles nothing'."""
+
+    def traced(*args):
+        counter["traces"] += 1
+        return fn(*args)
+
+    return jax.jit(traced, **jit_kw)
+
+
+@dataclasses.dataclass
+class CompiledPlan:
+    """A plan lowered to jitted callables for one table signature."""
+
+    key: Tuple
+    plan: planner_lib.Plan
+    agg: uda_lib.IGDAggregate
+    task: Any
+    epoch_fn: Callable  # scheme-specific jitted epoch
+    loss_fn: Optional[Callable]
+    trace_counter: Dict[str, int]
+
+    @property
+    def trace_count(self) -> int:
+        return self.trace_counter["traces"]
+
+
+class Engine:
+    """The unified analytics engine: query -> plan -> cached execute."""
+
+    def __init__(self):
+        self._compiled: Dict[Tuple, CompiledPlan] = {}
+        # key -> (pinned data leaves, report); see explain()
+        self._reports: Dict[Tuple, Tuple] = {}
+        self.stats = {"plan_cache_hits": 0, "plan_cache_misses": 0}
+
+    # -- planning ---------------------------------------------------------
+
+    def _aggregate_for(self, query: AnalyticsQuery):
+        spec = catalog.get(query.task)
+        task = spec.make_task(**dict(query.task_args))
+        agg = uda_lib.IGDAggregate(
+            task,
+            spec.step_size(query.n_examples),
+            prox=spec.prox(task),
+        )
+        return spec, task, agg
+
+    def explain(self, query: AnalyticsQuery) -> planner_lib.PlanReport:
+        """Plan the query; memoized on the live table + query knobs.
+
+        The table component of the key uses leaf identity (jax arrays
+        are immutable), NOT just shapes: a different table of the same
+        shape may have different statistics and must be re-planned. The
+        serving hot path — the same table queried repeatedly — hits."""
+        leaves = tuple(jax.tree.leaves(query.data))
+        key = (self._query_plan_key(query), tuple(id(x) for x in leaves))
+        hit = self._reports.get(key)
+        if hit is not None:
+            return hit[1]
+        _, _, agg = self._aggregate_for(query)
+        report = planner_lib.plan(query, agg)
+        # pin the leaves so a live memo entry's ids cannot be recycled
+        # for a different table; bound the memo so pins don't accumulate
+        while len(self._reports) >= 128:
+            self._reports.pop(next(iter(self._reports)))
+        self._reports[key] = (leaves, report)
+        return report
+
+    @staticmethod
+    def _query_plan_key(query: AnalyticsQuery) -> Tuple:
+        return query.cache_key_fields() + (
+            query.epochs,
+            query.memory_budget_bytes,
+            tuple(sorted(query.hints.items())),
+        )
+
+    # -- compilation cache ------------------------------------------------
+
+    def _compile(
+        self, query: AnalyticsQuery, plan: planner_lib.Plan
+    ) -> CompiledPlan:
+        key = query.cache_key_fields() + (plan,)
+        hit = self._compiled.get(key)
+        if hit is not None:
+            self.stats["plan_cache_hits"] += 1
+            return hit
+        self.stats["plan_cache_misses"] += 1
+
+        _, task, agg = self._aggregate_for(query)
+        counter = {"traces": 0}
+
+        if plan.scheme == "serial":
+            epoch_fn = _counted_jit(
+                lambda s, ex, rng: uda_lib.fold(agg, s, ex, unroll=plan.unroll),
+                counter,
+                donate_argnums=(0,),
+            )
+        elif plan.scheme == "segmented":
+            epoch_fn = _counted_jit(
+                lambda s, ex, rng: uda_lib.segmented_fold(
+                    agg, s, ex, plan.num_segments
+                ),
+                counter,
+                donate_argnums=(0,),
+            )
+        elif plan.scheme == "shared_memory":
+            cfg = parallel_lib.SharedMemoryConfig(
+                scheme=plan.sm_scheme, workers=plan.sm_workers
+            )
+
+            def sm_epoch(state, ex, rng):
+                model = parallel_lib.hogwild_fold(
+                    task, agg.step_size, state.model, ex, rng, cfg,
+                    prox=agg.prox,
+                )
+                n = jax.tree.leaves(ex)[0].shape[0]
+                return uda_lib.IGDState(
+                    model, state.step + n, state.weight + n
+                )
+
+            epoch_fn = _counted_jit(sm_epoch, counter)
+        elif plan.scheme == "mrs":
+            if plan.mrs_buffer <= 0:
+                raise ValueError(
+                    "an MRS plan needs mrs_buffer > 0 (the planner sizes "
+                    "it from the memory budget)"
+                )
+            cfg = mrs_lib.MRSConfig(buffer_size=plan.mrs_buffer,
+                                    ratio=plan.mrs_ratio)
+
+            def mrs_epoch(carry, ex, rng):
+                state, buf_a, buf_b, active = carry
+                state, buf_a = mrs_lib.mrs_epoch(
+                    agg, state, ex, buf_a, buf_b, active, cfg, rng
+                )
+                return (state, buf_a, buf_b, active)
+
+            epoch_fn = _counted_jit(mrs_epoch, counter)
+        else:
+            raise ValueError(f"unknown scheme {plan.scheme!r}")
+
+        loss_fn = _counted_jit(
+            lambda model, data: task.full_loss(model, data), counter
+        )
+        compiled = CompiledPlan(
+            key=key, plan=plan, agg=agg, task=task,
+            epoch_fn=epoch_fn, loss_fn=loss_fn, trace_counter=counter,
+        )
+        self._compiled[key] = compiled
+        return compiled
+
+    def cache_info(self) -> Dict[str, int]:
+        return dict(self.stats, compiled_plans=len(self._compiled))
+
+    def clear_cache(self) -> None:
+        self._compiled.clear()
+        self._reports.clear()
+        self.stats = {"plan_cache_hits": 0, "plan_cache_misses": 0}
+
+    # -- execution --------------------------------------------------------
+
+    def run(
+        self,
+        query: AnalyticsQuery,
+        *,
+        plan: Optional[planner_lib.Plan] = None,
+    ) -> "EngineResult":
+        """Plan (unless ``plan`` forces one), compile-or-hit, execute."""
+        report = None
+        if plan is None:
+            report = self.explain(query)
+            plan = report.chosen
+        compiled = self._compile(query, plan)
+        return _execute(compiled, query, report)
+
+
+@dataclasses.dataclass
+class EngineResult:
+    model: Any
+    losses: List[float]
+    epochs: int
+    converged: bool
+    plan: planner_lib.Plan
+    report: Optional[planner_lib.PlanReport]
+    shuffle_seconds: float
+    gradient_seconds: float
+    trace_count: int  # retraces of this query's executable, cumulative
+
+    def describe(self) -> str:
+        head = (
+            f"{self.epochs} epochs, loss={self.losses[-1]:.6g}, "
+            f"converged={self.converged}"
+        )
+        body = self.report.describe() if self.report else self.plan.describe()
+        return f"{head}\n{body}"
+
+
+def _execute(
+    compiled: CompiledPlan,
+    query: AnalyticsQuery,
+    report: Optional[planner_lib.PlanReport],
+) -> EngineResult:
+    plan = compiled.plan
+    agg = compiled.agg
+    data = query.data
+    n = query.n_examples
+    rng = jax.random.PRNGKey(query.seed)
+    perm_rng = jax.random.fold_in(rng, 0x5EED)
+    ordering = _ORDERINGS[plan.ordering]()
+    if query.target_loss is not None:
+        stop = lambda losses, epoch: bool(  # noqa: E731
+            losses and losses[-1] <= query.target_loss
+        )
+    elif query.tolerance:
+        stop = convergence.RelativeLossDrop(query.tolerance)
+    else:
+        stop = None
+
+    state = agg.initialize(rng)
+    if plan.scheme == "mrs":
+        zero_buf = jax.tree.map(
+            lambda x: jnp.zeros((plan.mrs_buffer,) + x.shape[1:], x.dtype),
+            data,
+        )
+        carry = (state, zero_buf, zero_buf, jnp.bool_(False))
+
+    losses: List[float] = []
+    shuffle_s = 0.0
+    grad_s = 0.0
+    converged = False
+    epoch = 0
+    for epoch in range(1, query.epochs + 1):
+        t0 = time.perf_counter()
+        examples, perm_rng = ordering.order(data, n, epoch, perm_rng)
+        jax.block_until_ready(examples)
+        t1 = time.perf_counter()
+        perm_rng, sub = jax.random.split(perm_rng)
+        if plan.scheme == "mrs":
+            state, buf_a, buf_b, _ = compiled.epoch_fn(carry, examples, sub)
+            # swap: the memory worker cycles last epoch's reservoir
+            carry = (state, buf_b, buf_a, jnp.bool_(True))
+        else:
+            state = compiled.epoch_fn(state, examples, sub)
+        jax.block_until_ready(state)
+        t2 = time.perf_counter()
+        shuffle_s += t1 - t0
+        grad_s += t2 - t1
+        # A stop rule needs the per-epoch objective; without one, a single
+        # evaluation after the last epoch suffices (full_loss scans the
+        # whole table — not free on the serving path).
+        if stop is not None and compiled.loss_fn is not None:
+            losses.append(float(compiled.loss_fn(agg.terminate(state), data)))
+            if stop(losses, epoch):
+                converged = True
+                break
+    if stop is None and compiled.loss_fn is not None and epoch:
+        losses.append(float(compiled.loss_fn(agg.terminate(state), data)))
+
+    return EngineResult(
+        model=agg.terminate(state),
+        losses=losses,
+        epochs=epoch,
+        converged=converged,
+        plan=plan,
+        report=report,
+        shuffle_seconds=shuffle_s,
+        gradient_seconds=grad_s,
+        trace_count=compiled.trace_count,
+    )

@@ -1,0 +1,313 @@
+"""Cost-based physical planning for analytics queries.
+
+The planner enumerates the physical-plan space the paper studies as
+independent knobs —
+
+    ordering policy (§3.2)  x  execution scheme (§3.3: serial fold,
+    shared-nothing segmented fold, shared-memory concurrency; §3.4:
+    buffered MRS)  x  scan unroll —
+
+and picks the cheapest plan under a cost model whose constants are
+measured by micro-probes (``repro.engine.probes``) rather than assumed.
+Statistics about the table (label-clusteredness via a Wald–Wolfowitz
+runs statistic) feed the convergence-rate term, so the pathological
+Clustered scan on label-sorted data is costed out, not special-cased.
+
+``explain()``/``Plan.describe()`` render the choice and every rejected
+candidate with its estimated cost — the engine's EXPLAIN.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Tuple
+
+import jax
+import numpy as np
+
+from repro.engine import probes
+from repro.engine.query import AnalyticsQuery
+
+ORDERINGS = ("clustered", "shuffle_once", "shuffle_always")
+SEGMENT_CANDIDATES = (2, 4, 8)
+SM_SCHEMES = ("lock", "aig", "nolock")
+SM_WORKERS = 8
+MRS_RATIO = 2
+# Convergence-penalty cap for a fully label-clustered scan (paper Fig. 5:
+# orders of magnitude more epochs; 50x is enough to always reject it).
+CLUSTERED_PENALTY_CAP = 50.0
+# Per-step overhead factor of the shared-memory simulator (ravel/unravel +
+# ring-buffer bookkeeping around each transition).
+SM_OVERHEAD = 3.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """A fully physical execution plan. Hashable: part of the compiled-
+    plan cache key."""
+
+    ordering: str  # clustered | shuffle_once | shuffle_always
+    scheme: str  # serial | segmented | shared_memory | mrs
+    num_segments: int = 1
+    sm_scheme: str = "nolock"
+    sm_workers: int = SM_WORKERS
+    mrs_buffer: int = 0
+    mrs_ratio: int = MRS_RATIO
+    unroll: int = 1
+
+    def describe(self) -> str:
+        if self.scheme == "serial":
+            ex = f"serial fold (unroll={self.unroll})"
+        elif self.scheme == "segmented":
+            ex = (
+                f"segmented fold ({self.num_segments} shared-nothing "
+                f"segments, merge=model-averaging, unroll={self.unroll})"
+            )
+        elif self.scheme == "shared_memory":
+            ex = (
+                f"shared-memory fold ({self.sm_scheme}, "
+                f"{self.sm_workers} workers)"
+            )
+        else:
+            ex = (
+                f"buffered MRS (reservoir={self.mrs_buffer}, "
+                f"{self.mrs_ratio} memory steps/tuple)"
+            )
+        return f"ordering={self.ordering} · {ex}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    plan: Plan
+    cost_seconds: float
+    est_epochs: float
+    note: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanReport:
+    """The planner's EXPLAIN output: the choice plus the whole ranking."""
+
+    chosen: Plan
+    cost_seconds: float
+    candidates: Tuple[Candidate, ...]
+    clusteredness: float
+    calibration: probes.Calibration
+
+    def describe(self) -> str:
+        lines = [
+            f"plan   : {self.chosen.describe()}",
+            f"cost   : {self.cost_seconds * 1e3:.2f} ms (est)"
+            f"   [clusteredness={self.clusteredness:.2f}, "
+            f"fold={min(self.calibration.fold_per_row.values()) * 1e6:.2f}"
+            f" us/row, shuffle={self.calibration.shuffle_per_row * 1e6:.2f}"
+            f" us/row]",
+        ]
+        for c in sorted(self.candidates, key=lambda c: c.cost_seconds)[1:]:
+            cost = (
+                "infeasible"
+                if math.isinf(c.cost_seconds)
+                else f"{c.cost_seconds * 1e3:.2f} ms"
+            )
+            note = f"  — {c.note}" if c.note else ""
+            lines.append(f"reject : {c.plan.describe()} ({cost}){note}")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# table statistics
+# ---------------------------------------------------------------------------
+
+
+def label_clusteredness(data) -> float:
+    """Wald–Wolfowitz runs statistic on the label column, mapped to
+    [0, 1]: 0 = order indistinguishable from random, 1 = fully clustered
+    (the CA-TX pathology). 0 when no label-like column exists."""
+    if not isinstance(data, dict) or "y" not in data:
+        return 0.0
+    y = np.asarray(jax.device_get(data["y"]))
+    if y.ndim != 1 or y.shape[0] < 8:
+        return 0.0
+    # binarize: sign for real labels, equality-runs for ints
+    if np.issubdtype(y.dtype, np.floating):
+        b = y >= np.median(y)
+    else:
+        b = y == y[0]
+    n1 = int(b.sum())
+    n2 = b.size - n1
+    if n1 == 0 or n2 == 0:
+        return 0.0
+    runs = 1 + int(np.count_nonzero(b[1:] != b[:-1]))
+    expected = 2.0 * n1 * n2 / (n1 + n2) + 1.0
+    return float(np.clip(1.0 - runs / expected, 0.0, 1.0))
+
+
+# ---------------------------------------------------------------------------
+# cost model
+# ---------------------------------------------------------------------------
+
+
+def _conv_multiplier(plan: Plan, clusteredness: float) -> Tuple[float, str]:
+    """Relative epochs-to-tolerance vs the shuffle-once serial baseline."""
+    mult = 1.0
+    note = ""
+    if plan.scheme == "mrs":
+        # the reservoir randomizes the gradient order itself, so MRS is
+        # immune to the stored order (that is its whole point, §3.4)
+        return 1.25, note  # reservoir ~ shuffle-once rate (paper Fig. 10)
+    if plan.ordering == "clustered":
+        # runs-starved gradient order: rate degrades sharply with c
+        penalty = 1.0 / max(1.0 - clusteredness, 1.0 / CLUSTERED_PENALTY_CAP)
+        mult *= penalty
+        if penalty > 2.0:
+            note = f"label-clustered scan: ~{penalty:.0f}x more epochs"
+    elif plan.ordering == "shuffle_always":
+        mult *= 0.95  # marginally better per-epoch rate (paper Fig. 5)
+    if plan.scheme == "segmented":
+        mult *= 1.0 + 0.1 * (plan.num_segments - 1)  # model-averaging loss
+    elif plan.scheme == "shared_memory":
+        mult *= 1.1 if plan.sm_scheme != "lock" else 1.0
+    return mult, note
+
+
+def _plan_cost(
+    plan: Plan,
+    query: AnalyticsQuery,
+    cal: probes.Calibration,
+    clusteredness: float,
+    shuffle_feasible: bool,
+) -> Candidate:
+    n = query.n_examples
+    epochs = max(query.epochs, 1)
+    n_dev = jax.device_count()
+
+    mult, note = _conv_multiplier(plan, clusteredness)
+    est_epochs = min(epochs * mult, epochs * CLUSTERED_PENALTY_CAP)
+
+    if plan.ordering != "clustered" and not shuffle_feasible:
+        return Candidate(
+            plan, float("inf"), est_epochs,
+            "shuffled copy exceeds memory budget",
+        )
+
+    fold_row = cal.fold_per_row.get(plan.unroll) or min(
+        cal.fold_per_row.values()
+    )
+    shuffles = {"clustered": 0.0, "shuffle_once": 1.0,
+                "shuffle_always": est_epochs}[plan.ordering]
+    cost = cal.shuffle_per_row * n * shuffles
+
+    if plan.scheme == "serial":
+        cost += fold_row * n * est_epochs
+    elif plan.scheme == "segmented":
+        speedup = max(1, min(plan.num_segments, n_dev))
+        per_epoch = fold_row * n / speedup
+        per_epoch += cal.merge_seconds * (plan.num_segments - 1)
+        cost += per_epoch * est_epochs
+    elif plan.scheme == "shared_memory":
+        speedup = max(1, min(plan.sm_workers, n_dev))
+        cost += SM_OVERHEAD * fold_row * n * est_epochs / speedup
+    else:  # mrs: 1 I/O step + ratio memory steps per streamed tuple
+        cost += fold_row * n * (1 + plan.mrs_ratio) * est_epochs
+
+    return Candidate(plan, cost, est_epochs, note)
+
+
+# ---------------------------------------------------------------------------
+# enumeration + choice
+# ---------------------------------------------------------------------------
+
+
+def _mrs_buffer_rows(query: AnalyticsQuery) -> int:
+    n = query.n_examples
+    if query.memory_budget_bytes:
+        per_row = max(query.data_bytes // max(n, 1), 1)
+        rows = max(int(query.memory_budget_bytes // (2 * per_row)), 8)
+    else:
+        rows = max(n // 10, 8)
+    return int(min(rows, n))
+
+
+def enumerate_plans(query: AnalyticsQuery, unroll: int) -> List[Plan]:
+    SCHEMES = ("serial", "segmented", "shared_memory", "mrs")
+    hints = dict(query.hints)
+    if "ordering" in hints and hints["ordering"] not in ORDERINGS:
+        raise ValueError(
+            f"unknown ordering hint {hints['ordering']!r}; "
+            f"valid: {ORDERINGS}"
+        )
+    if "scheme" in hints and hints["scheme"] not in SCHEMES:
+        raise ValueError(
+            f"unknown scheme hint {hints['scheme']!r}; valid: {SCHEMES}"
+        )
+    if hints.get("scheme") == "mrs" and hints.get("ordering") not in (
+        None, "clustered",
+    ):
+        raise ValueError(
+            "scheme='mrs' streams the stored order (its point is avoiding "
+            "the shuffle); it cannot be combined with an ordering hint of "
+            f"{hints['ordering']!r}"
+        )
+    n = query.n_examples
+    plans: List[Plan] = []
+    orderings = [hints["ordering"]] if "ordering" in hints else list(ORDERINGS)
+    schemes = [hints["scheme"]] if "scheme" in hints else list(SCHEMES)
+    for o in orderings:
+        for s in schemes:
+            if s == "serial":
+                plans.append(Plan(o, "serial", unroll=unroll))
+            elif s == "segmented":
+                ks = (
+                    [hints["num_segments"]]
+                    if "num_segments" in hints
+                    else [k for k in SEGMENT_CANDIDATES if n % k == 0]
+                )
+                plans.extend(
+                    Plan(o, "segmented", num_segments=k, unroll=unroll)
+                    for k in ks
+                )
+            elif s == "shared_memory":
+                plans.extend(
+                    Plan(o, "shared_memory", sm_scheme=sm) for sm in SM_SCHEMES
+                )
+            elif s == "mrs" and (o == "clustered" or "scheme" in hints):
+                # MRS exists to avoid the shuffle: stream in stored order
+                plans.append(
+                    Plan("clustered", "mrs", mrs_buffer=_mrs_buffer_rows(query))
+                )
+    return list(dict.fromkeys(plans))  # Plan is frozen/hashable
+
+
+def plan(query: AnalyticsQuery, agg) -> PlanReport:
+    """Choose a physical plan for ``query`` (aggregate ``agg`` is probed
+    for calibration)."""
+    cal = probes.calibrate(agg, query.data, query.cache_key_fields())
+    clustered = label_clusteredness(query.data)
+    shuffle_feasible = (
+        query.memory_budget_bytes is None
+        or query.data_bytes <= query.memory_budget_bytes
+    )
+    unroll = cal.best_unroll()
+    cands = [
+        _plan_cost(p, query, cal, clustered, shuffle_feasible)
+        for p in enumerate_plans(query, unroll)
+    ]
+    if not cands:
+        raise ValueError(
+            f"hints {dict(query.hints)!r} admit no physical plan"
+        )
+    cands.sort(key=lambda c: c.cost_seconds)
+    best = cands[0]
+    if math.isinf(best.cost_seconds):
+        raise RuntimeError(
+            f"no feasible plan for query (budget="
+            f"{query.memory_budget_bytes}); candidates: {cands}"
+        )
+    return PlanReport(
+        chosen=best.plan,
+        cost_seconds=best.cost_seconds,
+        candidates=tuple(cands),
+        clusteredness=clustered,
+        calibration=cal,
+    )

@@ -1,0 +1,97 @@
+"""Micro-probe calibration for the cost-based planner.
+
+The planner's constants are MEASURED, not guessed: on first contact with
+a (task, table-signature) pair the engine times, on a small probe slab,
+(a) a random shuffle-gather, (b) one jitted serial fold per unroll
+candidate, and (c) one pairwise merge — the same median-of-k timing the
+benchmark harness uses (``time_call`` here is the benchmarks' timing
+primitive; ``benchmarks/common.py`` re-exports it). Probe cost is a few
+ms once per signature; results are cached on the engine.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def time_call(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall time (seconds) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+PROBE_ROWS = 256  # slab size: big enough to amortize dispatch, still ~ms
+
+
+@dataclasses.dataclass(frozen=True)
+class Calibration:
+    """Per-(task, signature) measured constants (seconds)."""
+
+    shuffle_per_row: float
+    fold_per_row: Dict[int, float]  # unroll -> seconds/row
+    merge_seconds: float
+    probe_rows: int
+
+    def best_unroll(self) -> int:
+        return min(self.fold_per_row, key=self.fold_per_row.get)
+
+
+_CACHE: Dict[Tuple, Calibration] = {}
+
+
+def calibrate(agg, data, key: Tuple, *, unrolls=(1, 8)) -> Calibration:
+    """Measure the planner's constants on a probe slab of ``data``."""
+    if key in _CACHE:
+        return _CACHE[key]
+
+    n = jax.tree.leaves(data)[0].shape[0]
+    rows = min(n, PROBE_ROWS)
+    slab = jax.tree.map(lambda x: x[:rows], data)
+    rng = jax.random.PRNGKey(0)
+
+    # (a) shuffle: permutation + gather, the per-epoch ShuffleAlways cost
+    perm = jax.random.permutation(rng, rows)
+    shuffle = jax.jit(
+        lambda d, p: jax.tree.map(lambda x: jnp.take(x, p, axis=0), d)
+    )
+    t_shuffle = time_call(shuffle, slab, perm)
+
+    # (b) serial fold per unroll candidate (the transition's real cost)
+    from repro.core import uda as uda_lib
+
+    state0 = agg.initialize(rng)
+    fold_per_row = {}
+    for u in unrolls:
+        if u > rows:
+            continue
+        folder = jax.jit(lambda s, ex, u=u: uda_lib.fold(agg, s, ex, unroll=u))
+        fold_per_row[u] = time_call(folder, state0, slab) / rows
+
+    # (c) one pairwise merge (the segmented plan pays k-1 of these/epoch)
+    merger = jax.jit(agg.merge)
+    t_merge = time_call(merger, state0, state0)
+
+    cal = Calibration(
+        shuffle_per_row=t_shuffle / rows,
+        fold_per_row=fold_per_row,
+        merge_seconds=t_merge,
+        probe_rows=rows,
+    )
+    _CACHE[key] = cal
+    return cal
+
+
+def clear_cache() -> None:
+    _CACHE.clear()

@@ -1,0 +1,67 @@
+"""The declarative query surface of the engine.
+
+An ``AnalyticsQuery`` states WHAT to compute — which registered technique,
+over which table, to what tolerance, under what resource budget — and
+never how. Orderings, segment counts, concurrency schemes and buffer
+sizes are physical-plan decisions owned by ``repro.engine.planner``
+(paper §3.2–3.4: those knobs are generic, not per-technique).
+
+Mirrors the paper's SQL surface::
+
+    SELECT LogisticRegression('model', 'LabeledPapers', tolerance => 1e-3)
+
+==  ``engine.run(AnalyticsQuery(task="logreg", data=papers))``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Optional
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalyticsQuery:
+    """What the user wants. Only ``task`` and ``data`` are required.
+
+    ``hints`` may pin individual physical choices (``ordering``,
+    ``scheme``, ``num_segments``) — an escape hatch for experiments; the
+    planner fills everything left unset. ``memory_budget_bytes`` models
+    the RDBMS buffer pool: when the table exceeds it, plans that
+    materialize a shuffled copy are infeasible and the planner falls back
+    to buffered MRS (paper §3.4)."""
+
+    task: str
+    data: Any  # pytree of arrays, leading dim = rows
+    task_args: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    epochs: int = 20  # max epochs (the paper's outer-loop bound)
+    tolerance: float = 1e-3  # relative loss-drop stop (0 = run all epochs)
+    target_loss: Optional[float] = None  # stop at a known objective value
+    memory_budget_bytes: Optional[int] = None
+    seed: int = 0
+    hints: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def n_examples(self) -> int:
+        return jax.tree.leaves(self.data)[0].shape[0]
+
+    @property
+    def data_bytes(self) -> int:
+        return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(self.data))
+
+    def data_signature(self) -> tuple:
+        """Shape/dtype signature of the table — part of the plan-cache key
+        (compiled executables are shape-specialized)."""
+        struct = jax.tree.structure(self.data)
+        leaves = tuple(
+            (tuple(x.shape), str(x.dtype)) for x in jax.tree.leaves(self.data)
+        )
+        return (str(struct), leaves)
+
+    def cache_key_fields(self) -> tuple:
+        return (
+            self.task,
+            tuple(sorted(self.task_args.items())),
+            self.data_signature(),
+        )

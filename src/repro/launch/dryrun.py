@@ -143,6 +143,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *, grad_accum=8,
 
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):  # older jax wraps in a list
+            cost = cost[0] if cost else {}
         rec.update(
             status="OK",
             lower_s=round(t1 - t0, 1),

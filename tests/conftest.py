@@ -6,3 +6,11 @@ import sys
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:  # container image has no hypothesis; use the shim
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_shim
+
+    _hypothesis_shim.install()

@@ -57,6 +57,22 @@ def test_shuffle_always_changes_across_epochs():
     assert not np.array_equal(np.asarray(e1["y"]), np.asarray(e2["y"]))
 
 
+def test_shuffle_once_invalidates_on_new_data():
+    """Regression: the cached permuted table must not be returned for a
+    DIFFERENT incoming dataset (stale-cache bug)."""
+    pol = ordering.ShuffleOnce()
+    rng = RNG
+    a = {"x": jnp.arange(16.0)[:, None], "y": jnp.arange(16.0)}
+    b = {"x": jnp.arange(16.0)[:, None], "y": 100.0 + jnp.arange(16.0)}
+    ea, rng = pol.order(a, 16, 1, rng)
+    # repeated calls with the SAME table reuse the cached permutation
+    ea2, rng = pol.order(a, 16, 2, rng)
+    np.testing.assert_array_equal(np.asarray(ea["y"]), np.asarray(ea2["y"]))
+    # a different table must be (re)shuffled, not served from the cache
+    eb, rng = pol.order(b, 16, 1, rng)
+    assert np.asarray(eb["y"]).min() >= 100.0  # b's rows, not a's
+
+
 def test_cluster_by_label():
     y = jnp.array([-1.0, 1.0, -1.0, 1.0])
     data = {"x": jnp.arange(4.0)[:, None], "y": y}
