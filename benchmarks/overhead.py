@@ -26,7 +26,8 @@ def run(quick: bool = True):
         ("dblife_lr", tasks.SparseLogisticRegression(dim=8192),
          synthetic.sparse_classification(RNG, n, 8192, 16)),
         ("movielens_lmf",
-         tasks.LowRankMF(n_rows=512, n_cols=256, rank=8, mu=1e-2),
+         tasks.LowRankMF(n_rows=512, n_cols=256, rank=8, mu=1e-2,
+                         **tasks.LowRankMF.degrees_for(512, 256, n)),
          synthetic.ratings(RNG, 512, 256, n, rank=4)),
     ]
     for name, task, data in cases:

@@ -3,7 +3,14 @@
 Prints ``name,us_per_call,derived`` CSV. ``--full`` uses paper-scale
 sizes; the default is container-sized. Individual suites: ``--only
 fig7``. ``--json [DIR]`` additionally writes one machine-readable
-``BENCH_<suite>.json`` per suite (the cross-PR perf trajectory)."""
+``BENCH_<suite>.json`` per suite (the cross-PR perf trajectory) — and
+diffs each suite against the baseline already committed in DIR, failing
+loudly when a row regresses by more than ``REGRESSION_THRESHOLD``. A
+regressed or errored run is parked as ``BENCH_<suite>.json.rej`` so the
+committed baseline survives for the re-run; ``--full`` writes
+``BENCH_<suite>_full.json`` and never touches the quick baselines.
+Refreshing a baseline on purpose: set ``REPRO_BENCH_ACCEPT=1`` (the
+diff still prints, but doesn't fail and the baseline is replaced)."""
 
 from __future__ import annotations
 
@@ -14,10 +21,74 @@ import sys
 import time
 import traceback
 
+# >30% slower than the committed baseline = a loud failure. Rows faster
+# than _MIN_COMPARABLE_US are dispatch-noise on this box and are skipped
+# (sub-5ms timings swing well past the threshold run-to-run).
+REGRESSION_THRESHOLD = 0.30
+_MIN_COMPARABLE_US = 5000.0
+
+
+def _accept_baseline() -> bool:
+    """True when the operator asked to replace baselines on purpose
+    (``REPRO_BENCH_ACCEPT=0``/empty/unset all mean 'gate on')."""
+    return os.environ.get("REPRO_BENCH_ACCEPT", "0").lower() not in (
+        "", "0", "false", "no",
+    )
+
 
 def _parse_row(line: str) -> dict:
     name, us, derived = line.split(",", 2)
     return {"name": name, "us_per_call": float(us), "derived": derived}
+
+
+def _baseline_record(path: str):
+    """The COMMITTED baseline: git HEAD's copy when available (a prior
+    passing run may already have refreshed the working-tree file, and
+    diffing against that would let sub-threshold regressions ratchet),
+    falling back to the on-disk file outside a git checkout."""
+    import subprocess
+
+    d, base = os.path.split(os.path.abspath(path))
+    try:
+        out = subprocess.run(
+            ["git", "-C", d, "show", f"HEAD:./{base}"],
+            capture_output=True, text=True, timeout=10,
+        )
+        if out.returncode == 0:
+            return json.loads(out.stdout)
+    except (OSError, ValueError, subprocess.SubprocessError):
+        pass
+    with open(path) as f:
+        return json.load(f)
+
+
+def _diff_baseline(path: str, rows: list) -> list:
+    """Regression lines vs the committed BENCH json at ``path`` (if any)."""
+    try:
+        record = _baseline_record(path)
+        old = {r["name"]: r["us_per_call"] for r in record["rows"]}
+    except (OSError, ValueError, KeyError):
+        return []
+    out = []
+    for r in rows:
+        base = old.get(r["name"])
+        if base is None:
+            continue
+        # noise floor: flooring the baseline means sub-5ms rows only trip
+        # when they regress meaningfully PAST the floor (4ms -> 6ms of
+        # dispatch jitter passes; 4ms -> 2s of broken caching fails)
+        ratio = r["us_per_call"] / max(base, _MIN_COMPARABLE_US)
+        if ratio > 1.0 + REGRESSION_THRESHOLD:
+            out.append(
+                f"{r['name']}: {r['us_per_call']:.0f}us vs baseline "
+                f"{base:.0f}us ({ratio:.2f}x)"
+            )
+    # a baseline row with no counterpart (renamed/dropped) must not slip
+    # past the gate silently — losing a row loses its regression history
+    new_names = {r["name"] for r in rows}
+    for name in sorted(set(old) - new_names):
+        out.append(f"{name}: row missing from this run (baseline has it)")
+    return out
 
 
 def main() -> None:
@@ -42,6 +113,7 @@ def main() -> None:
         parallel_schemes,
         roofline,
         scalability,
+        serve_bench,
         tasks_runtime,
     )
 
@@ -55,6 +127,7 @@ def main() -> None:
         "table4": scalability,  # Table 4
         "roofline": roofline,  # framework roofline (§Roofline)
         "engine": engine_bench,  # repro.engine smoke (plan + cache)
+        "serve": serve_bench,  # high-QPS serving front-end
     }
     if args.only and args.only not in suites:
         raise SystemExit(
@@ -62,6 +135,7 @@ def main() -> None:
         )
     print("name,us_per_call,derived")
     failed = 0
+    regressions = []
     for name, mod in suites.items():
         if args.only and args.only != name:
             continue
@@ -78,18 +152,39 @@ def main() -> None:
             print(f"{name}_FAILED,0,{err}")
             traceback.print_exc(file=sys.stderr)
         if args.json is not None:
+            rows = [_parse_row(x) for x in lines]
             record = {
                 "suite": name,
                 "quick": quick,
                 "wall_seconds": round(time.time() - t0, 3),
-                "rows": [_parse_row(x) for x in lines],
+                "rows": rows,
             }
             if err:
                 record["error"] = err
-            path = os.path.join(args.json, f"BENCH_{name}.json")
+            # --full runs keep their own files: full-scale rows must never
+            # overwrite (or be diffed against) the quick-mode baselines
+            suffix = "" if quick else "_full"
+            path = os.path.join(args.json, f"BENCH_{name}{suffix}.json")
+            suite_reg = _diff_baseline(path, rows) if (not err and quick) else []
+            regressions += suite_reg
+            # a regressed or errored run must NOT replace the committed
+            # baseline (the failure would be one-shot: a re-run would diff
+            # against the just-written bad rows and pass) — park it beside
+            if err or (suite_reg and not _accept_baseline()):
+                path += ".rej"
             with open(path, "w") as f:
                 json.dump(record, f, indent=1)
             print(f"# wrote {path}", file=sys.stderr)
+    if regressions:
+        print("== baseline regressions (>"
+              f"{REGRESSION_THRESHOLD:.0%} vs committed BENCH_*.json) ==",
+              file=sys.stderr)
+        for r in regressions:
+            print(f"REGRESSION: {r}", file=sys.stderr)
+        if not _accept_baseline():
+            raise SystemExit(f"{len(regressions)} benchmark regressions")
+        print("REPRO_BENCH_ACCEPT set: accepting new baseline",
+              file=sys.stderr)
     if failed:
         raise SystemExit(f"{failed} suites failed")
 

@@ -1,0 +1,148 @@
+"""Serving benchmark: the high-QPS front-end vs one-at-a-time Engine.run.
+
+Offered-load sweep: a burst of B identical-shape logreg fits (different
+seeds) is served (a) one at a time through a cache-warm ``Engine.run``
+loop and (b) through ``ServingEngine`` with cross-query batching. Both
+sides exclude compilation (a warmup burst absorbs it — serving steady
+state, as in fig7). Rows report per-query latency, QPS, p50/p99 and the
+batched-vs-serial quality delta; separate rows pin admission-control
+load shedding and the persistent plan cache's warm start.
+
+``BENCH_serve.json`` is the serving baseline future PRs diff against.
+"""
+
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import row
+from repro import engine
+from repro.data import synthetic
+from repro.engine import probes, serve
+from repro.launch.serve import make_analytics_server, serve_analytics
+
+RNG = jax.random.PRNGKey(3)
+
+
+def _pct(xs, p):
+    return float(np.percentile(np.asarray(xs), p))
+
+
+def run(quick: bool = True):
+    rows = []
+    n = 2048 if quick else 8192
+    dim = 32
+    epochs = 20  # a realistic fit length (fig7 runs 10-60 epochs)
+    data = synthetic.dense_classification(RNG, n, dim)
+
+    def make_q(seed):
+        # plan pinned by hints: both sides run the identical physical
+        # plan, so the row isolates cross-query batching (and keeps the
+        # committed baseline stable when probe timings are noisy)
+        return engine.AnalyticsQuery(
+            task="logreg", data=data, task_args={"dim": dim},
+            epochs=epochs, tolerance=0.0, seed=seed,
+            hints={"ordering": "shuffle_once", "scheme": "serial"},
+        )
+
+    # -- one-at-a-time baseline (compiled-plan cache warm) ---------------
+    eng = engine.Engine()
+    eng.run(make_q(0))  # absorb planning probes + XLA compile
+
+    loads = (8, 16, 32) if quick else (8, 16, 32, 64)
+    trials = 5  # best-of-k on both sides: contention only inflates
+    serial_losses = {}
+    base_qps = {}
+    for b in loads:
+        qs = [make_q(s) for s in range(b)]
+        best_wall, best_lat = float("inf"), None
+        for _ in range(trials):
+            t0 = time.perf_counter()
+            lat = []
+            res = []
+            for q in qs:
+                res.append(eng.run(q))
+                lat.append(time.perf_counter() - t0)
+            wall = time.perf_counter() - t0
+            if wall < best_wall:
+                best_wall, best_lat = wall, lat
+        serial_losses[b] = [r.losses[-1] for r in res]
+        base_qps[b] = b / best_wall
+        rows.append(row(
+            f"serve_unbatched_b{b}", best_wall / b,
+            f"qps={base_qps[b]:.1f};p50_ms={_pct(best_lat, 50) * 1e3:.1f};"
+            f"p99_ms={_pct(best_lat, 99) * 1e3:.1f}",
+        ))
+
+    # -- batched serving -------------------------------------------------
+    for b in loads:
+        srv = make_analytics_server(
+            max_queue=4 * b, max_per_task=4 * b, max_batch=32
+        )
+        qs = [make_q(s) for s in range(b)]
+        serve_analytics(qs, server=srv)  # warm the fused executables
+        best_wall, best_tickets = float("inf"), None
+        for _ in range(trials):
+            t0 = time.perf_counter()
+            tickets = serve_analytics(qs, server=srv)
+            wall = time.perf_counter() - t0
+            if wall < best_wall:
+                best_wall, best_tickets = wall, tickets
+        lat = [t.latency_s for t in best_tickets]
+        batched = [t.result.losses[-1] for t in best_tickets]
+        quality = max(
+            abs(x - y) / max(abs(y), 1e-12)
+            for x, y in zip(batched, serial_losses[b])
+        )
+        speedup = (b / best_wall) / base_qps[b]
+        rows.append(row(
+            f"serve_batched_b{b}", best_wall / b,
+            f"qps={b / best_wall:.1f};p50_ms={_pct(lat, 50) * 1e3:.1f};"
+            f"p99_ms={_pct(lat, 99) * 1e3:.1f};"
+            f"speedup={speedup:.2f};max_loss_delta={quality:.2e}",
+        ))
+
+    # -- admission control: overload sheds, accepted work completes ------
+    srv = make_analytics_server(max_queue=8, max_per_task=8, max_batch=8)
+    serve_analytics([make_q(s) for s in range(8)], server=srv)  # warm
+    burst = [srv.submit(make_q(s)) for s in range(20)]
+    accepted = sum(t.accepted for t in burst)
+    rejected = [t for t in burst if not t.accepted]
+    t0 = time.perf_counter()
+    srv.drain()
+    wall = time.perf_counter() - t0
+    assert all(t.done for t in burst if t.accepted)
+    rows.append(row(
+        "serve_admission_burst20_queue8", wall / max(accepted, 1),
+        f"accepted={accepted};rejected={len(rejected)};"
+        f"reason={rejected[0].reject_reason if rejected else 'none'}",
+    ))
+
+    # -- persistent plan cache: fresh process re-probes/re-plans nothing -
+    cache_dir = tempfile.mkdtemp(prefix="plan_cache_")
+    try:
+        first = engine.Engine(plan_store=serve.PlanStore(cache_dir))
+        first.explain(make_q(0))
+        planned_cold = first.stats["plans_computed"]
+        # simulated second process: empty probe cache, fresh engine, same dir
+        probes.clear_cache()
+        probes_before = probes.stats["probe_runs"]
+        t0 = time.perf_counter()
+        second = engine.Engine(plan_store=serve.PlanStore(cache_dir))
+        second.explain(make_q(0))
+        t_warm = time.perf_counter() - t0
+        rows.append(row(
+            "serve_plan_cache_warm_start", t_warm,
+            f"cold_plans={planned_cold};"
+            f"warm_probe_runs={probes.stats['probe_runs'] - probes_before};"
+            f"warm_plans_computed={second.stats['plans_computed']};"
+            f"disk_hits={second.stats['plan_disk_hits']}",
+        ))
+    finally:
+        shutil.rmtree(cache_dir, ignore_errors=True)
+    return rows

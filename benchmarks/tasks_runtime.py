@@ -87,7 +87,13 @@ def run(quick: bool = True):
     # ---------------- LMF: IGD vs ALS ------------------------------
     nr, nc, nr_ratings = 256, 128, n * 4
     rdata = synthetic.ratings(RNG, nr, nc, nr_ratings, rank=4)
-    task_m = engine.get("lmf").make_task(n_rows=nr, n_cols=nc, rank=8, mu=1e-3)
+    from repro.tasks.lmf import LowRankMF
+
+    lmf_args = {
+        "n_rows": nr, "n_cols": nc, "rank": 8, "mu": 1e-3,
+        **LowRankMF.degrees_for(nr, nc, nr_ratings),
+    }
+    task_m = engine.get("lmf").make_task(**lmf_args)
     t0 = time.perf_counter()
     m_als = baselines.als_lmf(rdata, nr, nc, 8, sweeps=8)
     t_als = time.perf_counter() - t0
@@ -95,8 +101,7 @@ def run(quick: bool = True):
 
     t_lmf, res_lmf = _timed_engine_run(
         engine.AnalyticsQuery(
-            task="lmf", data=rdata,
-            task_args={"n_rows": nr, "n_cols": nc, "rank": 8, "mu": 1e-3},
+            task="lmf", data=rdata, task_args=lmf_args,
             epochs=60, tolerance=0.0, target_loss=l_als * 1.5,
             # ratings have no label column for the clusteredness statistic,
             # but arrive row-sorted: pin the paper's shuffle-once ordering

@@ -19,8 +19,13 @@ def main():
     n_rows, n_cols, n_ratings, rank = 512, 256, 65536, 8
     ratings = synthetic.ratings(rng, n_rows, n_cols, n_ratings, rank=4)
 
-    task = tasks.LowRankMF(n_rows=n_rows, n_cols=n_cols, rank=rank, mu=1e-3)
-    agg = uda.IGDAggregate(task, igd.diminishing(0.05, decay=n_ratings))
+    task = tasks.LowRankMF(
+        n_rows=n_rows, n_cols=n_cols, rank=rank, mu=1e-3,
+        # apportion the Frobenius penalty by the true mean degrees, or the
+        # per-example regularizer is mean-degree-times too strong
+        **tasks.LowRankMF.degrees_for(n_rows, n_cols, n_ratings),
+    )
+    agg = uda.IGDAggregate(task, igd.diminishing(0.1, decay=n_ratings))
 
     t0 = time.perf_counter()
     res = uda.run_igd(

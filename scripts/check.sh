@@ -1,8 +1,12 @@
 #!/usr/bin/env bash
-# Tier-1 verification: the full test suite plus a ~10-second engine smoke
-# benchmark (plan choice + compiled-plan cache). Run from the repo root:
+# Tier-1 verification: the full test suite plus ~10-second smoke
+# benchmarks for the engine (plan choice + compiled-plan cache) and the
+# serving front-end (admission + batching + persistent plan cache).
+# The --json runs diff each suite against the committed BENCH_*.json
+# baseline and fail on >30% regressions (set REPRO_BENCH_ACCEPT=1 when
+# refreshing a baseline on purpose). Run from the repo root:
 #
-#   scripts/check.sh            # tests + engine smoke
+#   scripts/check.sh            # tests + engine smoke + serve smoke
 #   scripts/check.sh --fast     # tests only
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -15,6 +19,8 @@ python -m pytest -x -q
 if [[ "${1:-}" != "--fast" ]]; then
   echo "== engine smoke benchmark =="
   python -m benchmarks.run --only engine --json .
+  echo "== serve smoke benchmark =="
+  python -m benchmarks.run --only serve --json .
 fi
 
 echo "CHECK OK"

@@ -17,9 +17,10 @@ New techniques register through the catalog (see ENGINE.md)::
 """
 
 from repro.engine.catalog import TaskSpec, get, names, register_task, unregister  # noqa: F401
-from repro.engine.executor import CompiledPlan, Engine, EngineResult  # noqa: F401
+from repro.engine.executor import CompiledPlan, Engine, EngineResult, build_epoch_fn  # noqa: F401
 from repro.engine.planner import Plan, PlanReport, label_clusteredness  # noqa: F401
 from repro.engine.query import AnalyticsQuery  # noqa: F401
+from repro.engine.serve import PlanStore, ServeConfig, ServingEngine, Ticket  # noqa: F401
 from repro.engine import probes, sweep  # noqa: F401
 
 # The default process-wide engine: callers share one compiled-plan cache,

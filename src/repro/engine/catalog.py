@@ -39,11 +39,6 @@ def _l1_from_mu(task) -> Callable:
     return igd.make_l1_prox(mu) if mu else igd.identity_prox
 
 
-def _l2_from_mu(task) -> Callable:
-    mu = getattr(task, "mu", 0.0)
-    return igd.make_l2_prox(mu) if mu else igd.identity_prox
-
-
 @dataclasses.dataclass(frozen=True)
 class TaskSpec:
     """Catalog row: how to build the task and its IGD defaults."""
@@ -54,6 +49,11 @@ class TaskSpec:
     step_size: Callable[[int], igd.StepSize]
     # task instance -> prox rule (regularizer / feasible-set projection)
     prox: Callable[[Any], Callable] = _no_prox
+    # (task_args, n_examples) -> extra args the ENGINE fills in from the
+    # table it is about to run on (explicit task_args always win). Lets a
+    # technique depend on table statistics the user shouldn't have to
+    # remember — e.g. LMF's degree apportionment.
+    derive_args: Optional[Callable[[dict, int], dict]] = None
 
     def make_task(self, **task_args):
         return self.factory(**task_args)
@@ -67,17 +67,20 @@ def register_task(
     *,
     step_size: Optional[Callable[[int], igd.StepSize]] = None,
     prox: Callable[[Any], Callable] = _no_prox,
+    derive_args: Optional[Callable[[dict, int], dict]] = None,
 ):
     """Class decorator registering a ``Task`` under ``name``.
 
     ``step_size``: n_examples -> StepSize (default: diminishing 0.1/epoch).
-    ``prox``: task -> prox rule (default: identity)."""
+    ``prox``: task -> prox rule (default: identity).
+    ``derive_args``: (task_args, n_examples) -> args the engine derives
+    from the live table when the user left them unset (default: none)."""
     step = step_size or (lambda n: igd.diminishing(0.1, decay=max(n, 1)))
 
     def deco(cls):
         if name in _REGISTRY:
             raise ValueError(f"task {name!r} already registered")
-        _REGISTRY[name] = TaskSpec(name, cls, step, prox)
+        _REGISTRY[name] = TaskSpec(name, cls, step, prox, derive_args)
         return cls
 
     return deco
@@ -132,10 +135,30 @@ register_task(
     prox=_l1_from_mu,
 )(tasks_lib.SparseSVM)
 
+# LMF localizes its Frobenius regularizer inside example_loss (the
+# Gemulla/Bismarck transition touches only rows L_i and R_j, so the
+# penalty rides along apportioned by degree — see tasks/lmf.py). It must
+# NOT also get an L2 prox: a prox applies the full-table penalty once
+# per tuple, i.e. n_ratings× too strong, which shrank every factor by
+# ~exp(-alpha*mu*n) per epoch and stalled fig7 at 20× the ALS loss.
+# The degree apportionment is derived from the live table by the engine
+# (the 1.0 class defaults over-penalize by the mean degree otherwise).
+
+
+def _lmf_derive_degrees(task_args: dict, n_examples: int) -> dict:
+    if "mean_row_degree" in task_args or "mean_col_degree" in task_args:
+        return {}  # explicit user choice wins
+    if "n_rows" not in task_args or "n_cols" not in task_args:
+        return {}  # let make_task raise its own missing-arg TypeError
+    return tasks_lib.LowRankMF.degrees_for(
+        task_args["n_rows"], task_args["n_cols"], n_examples
+    )
+
+
 register_task(
     "lmf",
-    step_size=lambda n: igd.diminishing(0.05, decay=max(n, 1)),
-    prox=_l2_from_mu,
+    step_size=lambda n: igd.diminishing(0.1, decay=max(n, 1)),
+    derive_args=_lmf_derive_degrees,
 )(tasks_lib.LowRankMF)
 
 register_task(

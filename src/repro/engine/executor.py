@@ -31,6 +31,14 @@ _ORDERINGS = {
     "shuffle_always": ordering_lib.ShuffleAlways,
 }
 
+# Salt deriving the ordering/permutation rng stream from a query's seed:
+#   perm_rng = fold_in(PRNGKey(seed), PERM_STREAM_SALT)
+# The serving front-end's batched path (repro.engine.serve) replicates
+# this derivation to stay bit-identical with the singleton executor —
+# change it ONLY in both lock-step (the batched-vs-serial test catches a
+# divergence).
+PERM_STREAM_SALT = 0x5EED
+
 
 def _counted_jit(fn, counter: Dict[str, int], **jit_kw):
     """jit(fn) that bumps ``counter['traces']`` on every retrace — the
@@ -54,26 +62,100 @@ class CompiledPlan:
     epoch_fn: Callable  # scheme-specific jitted epoch
     loss_fn: Optional[Callable]
     trace_counter: Dict[str, int]
+    # the objective evaluation retraces on its own cadence (stop rules
+    # call it every epoch); counted separately so ``trace_count`` stays a
+    # pure epoch-executable observable
+    loss_trace_counter: Dict[str, int]
 
     @property
     def trace_count(self) -> int:
         return self.trace_counter["traces"]
 
+    @property
+    def loss_trace_count(self) -> int:
+        return self.loss_trace_counter["traces"]
+
+
+def build_epoch_fn(task, agg, plan: planner_lib.Plan) -> Callable:
+    """The chosen scheme's raw (unjitted) epoch function
+    ``(state_or_carry, examples, rng) -> state_or_carry``.
+
+    Shared by ``Engine._compile`` (which jits it per table signature) and
+    the serving front-end (which vmaps it over a batch of fused queries
+    before jitting — ``repro.engine.serve``)."""
+    if plan.scheme == "serial":
+        return lambda s, ex, rng: uda_lib.fold(agg, s, ex, unroll=plan.unroll)
+    if plan.scheme == "segmented":
+        return lambda s, ex, rng: uda_lib.segmented_fold(
+            agg, s, ex, plan.num_segments
+        )
+    if plan.scheme == "shared_memory":
+        cfg = parallel_lib.SharedMemoryConfig(
+            scheme=plan.sm_scheme, workers=plan.sm_workers
+        )
+
+        def sm_epoch(state, ex, rng):
+            model = parallel_lib.hogwild_fold(
+                task, agg.step_size, state.model, ex, rng, cfg,
+                prox=agg.prox,
+            )
+            n = jax.tree.leaves(ex)[0].shape[0]
+            return uda_lib.IGDState(model, state.step + n, state.weight + n)
+
+        return sm_epoch
+    if plan.scheme == "mrs":
+        if plan.mrs_buffer <= 0:
+            raise ValueError(
+                "an MRS plan needs mrs_buffer > 0 (the planner sizes "
+                "it from the memory budget)"
+            )
+        cfg = mrs_lib.MRSConfig(buffer_size=plan.mrs_buffer,
+                                ratio=plan.mrs_ratio)
+
+        def mrs_epoch(carry, ex, rng):
+            state, buf_a, buf_b, active = carry
+            state, buf_a = mrs_lib.mrs_epoch(
+                agg, state, ex, buf_a, buf_b, active, cfg, rng
+            )
+            return (state, buf_a, buf_b, active)
+
+        return mrs_epoch
+    raise ValueError(f"unknown scheme {plan.scheme!r}")
+
+
+def _fresh_stats() -> Dict[str, int]:
+    return {
+        "plan_cache_hits": 0,
+        "plan_cache_misses": 0,
+        "plans_computed": 0,  # planner actually ran (vs memo/disk hit)
+        "plan_disk_hits": 0,
+    }
+
 
 class Engine:
-    """The unified analytics engine: query -> plan -> cached execute."""
+    """The unified analytics engine: query -> plan -> cached execute.
 
-    def __init__(self):
+    ``plan_store`` (optional) is a persistent plan cache — an object with
+    ``load(plan_key, query) -> PlanReport | None`` and
+    ``store(plan_key, query, report)`` (see ``repro.engine.serve.PlanStore``
+    for the on-disk JSON implementation). A fresh process pointed at a
+    populated store warm-starts: it re-probes and re-plans nothing."""
+
+    def __init__(self, plan_store=None):
         self._compiled: Dict[Tuple, CompiledPlan] = {}
         # key -> (pinned data leaves, report); see explain()
         self._reports: Dict[Tuple, Tuple] = {}
-        self.stats = {"plan_cache_hits": 0, "plan_cache_misses": 0}
+        self.plan_store = plan_store
+        self.stats = _fresh_stats()
 
     # -- planning ---------------------------------------------------------
 
     def _aggregate_for(self, query: AnalyticsQuery):
         spec = catalog.get(query.task)
-        task = spec.make_task(**dict(query.task_args))
+        args = dict(query.task_args)
+        if spec.derive_args is not None:
+            args.update(spec.derive_args(args, query.n_examples))
+        task = spec.make_task(**args)
         agg = uda_lib.IGDAggregate(
             task,
             spec.step_size(query.n_examples),
@@ -89,12 +171,22 @@ class Engine:
         shape may have different statistics and must be re-planned. The
         serving hot path — the same table queried repeatedly — hits."""
         leaves = tuple(jax.tree.leaves(query.data))
-        key = (self._query_plan_key(query), tuple(id(x) for x in leaves))
+        plan_key = self._query_plan_key(query)
+        key = (plan_key, tuple(id(x) for x in leaves))
         hit = self._reports.get(key)
         if hit is not None:
             return hit[1]
-        _, _, agg = self._aggregate_for(query)
-        report = planner_lib.plan(query, agg)
+        report = None
+        if self.plan_store is not None:
+            report = self.plan_store.load(plan_key, query)
+            if report is not None:
+                self.stats["plan_disk_hits"] += 1
+        if report is None:
+            _, _, agg = self._aggregate_for(query)
+            report = planner_lib.plan(query, agg)
+            self.stats["plans_computed"] += 1
+            if self.plan_store is not None:
+                self.plan_store.store(plan_key, query, report)
         # pin the leaves so a live memo entry's ids cannot be recycled
         # for a different table; bound the memo so pins don't accumulate
         while len(self._reports) >= 128:
@@ -124,63 +216,23 @@ class Engine:
 
         _, task, agg = self._aggregate_for(query)
         counter = {"traces": 0}
+        loss_counter = {"traces": 0}
 
-        if plan.scheme == "serial":
-            epoch_fn = _counted_jit(
-                lambda s, ex, rng: uda_lib.fold(agg, s, ex, unroll=plan.unroll),
-                counter,
-                donate_argnums=(0,),
-            )
-        elif plan.scheme == "segmented":
-            epoch_fn = _counted_jit(
-                lambda s, ex, rng: uda_lib.segmented_fold(
-                    agg, s, ex, plan.num_segments
-                ),
-                counter,
-                donate_argnums=(0,),
-            )
-        elif plan.scheme == "shared_memory":
-            cfg = parallel_lib.SharedMemoryConfig(
-                scheme=plan.sm_scheme, workers=plan.sm_workers
-            )
-
-            def sm_epoch(state, ex, rng):
-                model = parallel_lib.hogwild_fold(
-                    task, agg.step_size, state.model, ex, rng, cfg,
-                    prox=agg.prox,
-                )
-                n = jax.tree.leaves(ex)[0].shape[0]
-                return uda_lib.IGDState(
-                    model, state.step + n, state.weight + n
-                )
-
-            epoch_fn = _counted_jit(sm_epoch, counter)
-        elif plan.scheme == "mrs":
-            if plan.mrs_buffer <= 0:
-                raise ValueError(
-                    "an MRS plan needs mrs_buffer > 0 (the planner sizes "
-                    "it from the memory budget)"
-                )
-            cfg = mrs_lib.MRSConfig(buffer_size=plan.mrs_buffer,
-                                    ratio=plan.mrs_ratio)
-
-            def mrs_epoch(carry, ex, rng):
-                state, buf_a, buf_b, active = carry
-                state, buf_a = mrs_lib.mrs_epoch(
-                    agg, state, ex, buf_a, buf_b, active, cfg, rng
-                )
-                return (state, buf_a, buf_b, active)
-
-            epoch_fn = _counted_jit(mrs_epoch, counter)
-        else:
-            raise ValueError(f"unknown scheme {plan.scheme!r}")
-
+        # Every non-MRS scheme's state is dead after the epoch call, so the
+        # aggregate runs in place (donation). The MRS carry aliases one
+        # zero buffer as both reservoirs on epoch 1, which donation
+        # forbids, and the swap needs the undonated buffer objects.
+        donate = (0,) if plan.scheme != "mrs" else ()
+        epoch_fn = _counted_jit(
+            build_epoch_fn(task, agg, plan), counter, donate_argnums=donate
+        )
         loss_fn = _counted_jit(
-            lambda model, data: task.full_loss(model, data), counter
+            lambda model, data: task.full_loss(model, data), loss_counter
         )
         compiled = CompiledPlan(
             key=key, plan=plan, agg=agg, task=task,
             epoch_fn=epoch_fn, loss_fn=loss_fn, trace_counter=counter,
+            loss_trace_counter=loss_counter,
         )
         self._compiled[key] = compiled
         return compiled
@@ -191,7 +243,7 @@ class Engine:
     def clear_cache(self) -> None:
         self._compiled.clear()
         self._reports.clear()
-        self.stats = {"plan_cache_hits": 0, "plan_cache_misses": 0}
+        self.stats = _fresh_stats()
 
     # -- execution --------------------------------------------------------
 
@@ -220,13 +272,15 @@ class EngineResult:
     report: Optional[planner_lib.PlanReport]
     shuffle_seconds: float
     gradient_seconds: float
-    trace_count: int  # retraces of this query's executable, cumulative
+    trace_count: int  # retraces of this query's epoch executable, cumulative
+    loss_trace_count: int = 0  # retraces of the objective evaluation
+    batch_size: int = 1  # queries fused into the epoch call that ran this
 
     def describe(self) -> str:
-        head = (
-            f"{self.epochs} epochs, loss={self.losses[-1]:.6g}, "
-            f"converged={self.converged}"
-        )
+        # losses can be empty: epochs=0, or a run that never evaluated
+        # the objective (no stop rule and no loss_fn)
+        loss = f"loss={self.losses[-1]:.6g}" if self.losses else "loss=n/a"
+        head = f"{self.epochs} epochs, {loss}, converged={self.converged}"
         body = self.report.describe() if self.report else self.plan.describe()
         return f"{head}\n{body}"
 
@@ -241,7 +295,7 @@ def _execute(
     data = query.data
     n = query.n_examples
     rng = jax.random.PRNGKey(query.seed)
-    perm_rng = jax.random.fold_in(rng, 0x5EED)
+    perm_rng = jax.random.fold_in(rng, PERM_STREAM_SALT)
     ordering = _ORDERINGS[plan.ordering]()
     if query.target_loss is not None:
         stop = lambda losses, epoch: bool(  # noqa: E731
@@ -302,4 +356,5 @@ def _execute(
         shuffle_seconds=shuffle_s,
         gradient_seconds=grad_s,
         trace_count=compiled.trace_count,
+        loss_trace_count=compiled.loss_trace_count,
     )

@@ -76,6 +76,13 @@ class Plan:
             )
         return f"ordering={self.ordering} · {ex}"
 
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Plan":
+        return cls(**d)
+
 
 @dataclasses.dataclass(frozen=True)
 class Candidate:
@@ -83,6 +90,27 @@ class Candidate:
     cost_seconds: float
     est_epochs: float
     note: str = ""
+
+    def to_dict(self) -> dict:
+        return {
+            "plan": self.plan.to_dict(),
+            # inf (infeasible) is not valid JSON: round-trip as None
+            "cost_seconds": None
+            if math.isinf(self.cost_seconds)
+            else self.cost_seconds,
+            "est_epochs": self.est_epochs,
+            "note": self.note,
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Candidate":
+        cost = d["cost_seconds"]
+        return cls(
+            plan=Plan.from_dict(d["plan"]),
+            cost_seconds=float("inf") if cost is None else cost,
+            est_epochs=d["est_epochs"],
+            note=d.get("note", ""),
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,6 +141,28 @@ class PlanReport:
             note = f"  — {c.note}" if c.note else ""
             lines.append(f"reject : {c.plan.describe()} ({cost}){note}")
         return "\n".join(lines)
+
+    def to_dict(self) -> dict:
+        """JSON-serializable form (the on-disk plan cache's payload)."""
+        return {
+            "chosen": self.chosen.to_dict(),
+            "cost_seconds": self.cost_seconds,
+            "candidates": [c.to_dict() for c in self.candidates],
+            "clusteredness": self.clusteredness,
+            "calibration": self.calibration.to_dict(),
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PlanReport":
+        return cls(
+            chosen=Plan.from_dict(d["chosen"]),
+            cost_seconds=d["cost_seconds"],
+            candidates=tuple(
+                Candidate.from_dict(c) for c in d["candidates"]
+            ),
+            clusteredness=d["clusteredness"],
+            calibration=probes.Calibration.from_dict(d["calibration"]),
+        )
 
 
 # ---------------------------------------------------------------------------

@@ -47,14 +47,37 @@ class Calibration:
     def best_unroll(self) -> int:
         return min(self.fold_per_row, key=self.fold_per_row.get)
 
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        # JSON keys are strings; from_dict restores the int unrolls
+        d["fold_per_row"] = {str(k): v for k, v in self.fold_per_row.items()}
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Calibration":
+        d = dict(d)
+        d["fold_per_row"] = {int(k): v for k, v in d["fold_per_row"].items()}
+        return cls(**d)
+
 
 _CACHE: Dict[Tuple, Calibration] = {}
+
+# probe_runs counts actual micro-probe measurements (cache misses). The
+# persistent plan cache pins this to zero across a process restart.
+stats = {"probe_runs": 0}
+
+
+def seed(key: Tuple, cal: Calibration) -> None:
+    """Install a previously measured calibration (e.g. loaded from the
+    on-disk plan cache) so ``calibrate`` never re-probes this key."""
+    _CACHE[key] = cal
 
 
 def calibrate(agg, data, key: Tuple, *, unrolls=(1, 8)) -> Calibration:
     """Measure the planner's constants on a probe slab of ``data``."""
     if key in _CACHE:
         return _CACHE[key]
+    stats["probe_runs"] += 1
 
     n = jax.tree.leaves(data)[0].shape[0]
     rows = min(n, PROBE_ROWS)

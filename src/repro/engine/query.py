@@ -65,3 +65,32 @@ class AnalyticsQuery:
             tuple(sorted(self.task_args.items())),
             self.data_signature(),
         )
+
+    def content_fingerprint(self, sample_rows: int = 24) -> str:
+        """Cheap content hash of the table: signature + boundary rows +
+        evenly strided interior rows of every leaf. The persistent plan
+        cache stores it so a *different* table with the same shape (whose
+        statistics — e.g. clusteredness — may differ) invalidates the
+        on-disk entry instead of silently reusing its plan. Interior
+        samples matter: a reordered table (same multiset of rows, e.g.
+        label-clustered vs shuffled — exactly what the planner keys on)
+        must change the fingerprint, and boundary rows alone can miss
+        it."""
+        import hashlib
+
+        import numpy as np
+
+        h = hashlib.sha256(repr(self.data_signature()).encode())
+        for leaf in jax.tree.leaves(self.data):
+            n = leaf.shape[0] if getattr(leaf, "ndim", 0) else 0
+            if n == 0:
+                continue
+            edge = max(sample_rows // 6, 1)
+            idx = np.unique(np.concatenate([
+                np.arange(min(edge, n)),
+                np.linspace(0, n - 1, num=min(sample_rows, n)).astype(int),
+                np.arange(max(n - edge, 0), n),
+            ]))
+            x = np.asarray(jax.device_get(leaf[idx]))
+            h.update(x.tobytes())
+        return h.hexdigest()[:32]

@@ -1,0 +1,695 @@
+"""repro.engine.serve — the high-QPS serving front-end.
+
+A database serves many concurrent analytics queries, not one script at a
+time. This layer models that multi-tenant reality on top of the unified
+engine with three mechanisms:
+
+* **Admission control** (``ServingEngine.submit``): a bounded queue with
+  a per-task depth limit. Overload sheds cleanly — a rejected query gets
+  an immediate ``Ticket`` with ``accepted=False`` and a reason
+  (``queue_full`` / ``task_limit``) instead of unbounded queueing.
+
+* **Cross-query batching** (``ServingEngine.pump``): queued queries that
+  share a *fused-epoch key* — same ``(task, task_args, table signature)``
+  (the executor's cache key fields), same epoch budget, same chosen
+  plan — are stacked along a new query axis and the ENTIRE multi-epoch
+  run executes as one compiled call (``lax.scan`` over epochs around a
+  ``vmap`` over queries): N concurrent fits of the same shape cost ~1
+  executable instead of N, with zero per-epoch host dispatch. Per-query
+  rng streams are batched threefry ops (bit-identical to the singleton
+  executor's), shuffle orderings fold through permutation indices
+  in-scan instead of materializing permuted copies, and the batched
+  executable's scan unroll is re-probed on a stacked slab. Queries with
+  an early-stop rule (``tolerance``/``target_loss``) or an MRS plan keep
+  per-query control flow and fall back to singleton ``Engine.run``.
+
+* **Persistent plan cache** (``PlanStore``): the planner's artifacts —
+  chosen plan, full EXPLAIN report, micro-probe calibration — persisted
+  as one JSON file per plan-cache key. A fresh process pointed at a
+  populated store warm-starts: ``explain`` loads the report and seeds
+  the probe cache, so it re-probes and re-plans nothing (the XLA
+  executables themselves still compile per process; what the store
+  eliminates is every *measurement* on the hot path).
+
+Typical use::
+
+    from repro.engine import serve
+
+    srv = serve.ServingEngine(serve.ServeConfig(cache_dir=".plan_cache"))
+    # NOTE: only fixed-epoch queries fuse — build them with
+    # tolerance=0.0 and no target_loss. AnalyticsQuery's DEFAULT
+    # tolerance (1e-3) is an early-stop rule, which forces the
+    # per-query singleton path (stats["singleton_queries"] shows it).
+    tickets = [srv.submit(q) for q in queries]
+    srv.drain()
+    for t in tickets:
+        print(t.result.describe() if t.accepted else t.reject_reason)
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import hashlib
+import json
+import os
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ordering as ordering_lib, uda as uda_lib
+from repro.engine import executor, planner as planner_lib, probes
+from repro.engine.query import AnalyticsQuery
+
+# Bump when the on-disk entry layout (or anything the planner persists)
+# changes shape: version-mismatched entries are ignored and rewritten.
+FORMAT_VERSION = 1
+
+REJECT_QUEUE_FULL = "queue_full"
+REJECT_TASK_LIMIT = "task_limit"
+
+
+# ---------------------------------------------------------------------------
+# persistent plan cache
+# ---------------------------------------------------------------------------
+
+
+class PlanStore:
+    """On-disk plan cache: ``<root>/plan_<sha256(plan_key)>.json``.
+
+    Each entry holds {version, key repr, table content fingerprint,
+    serialized PlanReport (plan + calibrated cost table + full candidate
+    ranking)}. Invalidation is structural: a version bump, a key-repr
+    mismatch (hash collision / foreign file) or a fingerprint mismatch
+    (same-shaped but different table, whose statistics may differ) all
+    read as a miss, and the next ``store`` overwrites the entry.
+    Writes are atomic (tmp file + rename) so a crashed process never
+    leaves a torn entry."""
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    def _path(self, plan_key: Tuple) -> str:
+        digest = hashlib.sha256(repr(plan_key).encode()).hexdigest()[:32]
+        return os.path.join(self.root, f"plan_{digest}.json")
+
+    def load(
+        self, plan_key: Tuple, query: AnalyticsQuery
+    ) -> Optional[planner_lib.PlanReport]:
+        try:
+            with open(self._path(plan_key)) as f:
+                entry = json.load(f)
+        except (OSError, ValueError):
+            return None
+        if (
+            entry.get("version") != FORMAT_VERSION
+            or entry.get("key") != repr(plan_key)
+            or entry.get("fingerprint") != query.content_fingerprint()
+        ):
+            return None
+        try:
+            report = planner_lib.PlanReport.from_dict(entry["report"])
+        except (KeyError, TypeError, ValueError):
+            return None
+        # seed the probe cache: even a re-plan (e.g. different epochs
+        # against the same table) measures nothing in this process
+        probes.seed(query.cache_key_fields(), report.calibration)
+        return report
+
+    def store(
+        self, plan_key: Tuple, query: AnalyticsQuery,
+        report: planner_lib.PlanReport,
+    ) -> None:
+        entry = {
+            "version": FORMAT_VERSION,
+            "key": repr(plan_key),
+            "fingerprint": query.content_fingerprint(),
+            "report": report.to_dict(),
+        }
+        path = self._path(plan_key)
+        tmp = f"{path}.tmp.{os.getpid()}"
+        try:
+            with open(tmp, "w") as f:
+                json.dump(entry, f, indent=1)
+            os.replace(tmp, path)
+        except OSError:
+            # persistence is an optimization: a full/read-only/deleted
+            # cache dir must degrade to planning without it, not turn
+            # every new-plan-key query into a serving error
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_queue: int = 64  # bounded admission queue (total queued queries)
+    max_per_task: int = 32  # per-task queue-depth limit
+    max_batch: int = 8  # queries fused into one vmapped epoch call
+    cache_dir: Optional[str] = None  # persistent plan cache root
+    # bound on retained fused executables: each entry holds compiled XLA
+    # code per (query key, plan, batch size, epochs), so a long-running
+    # server seeing many burst sizes must not accumulate them unboundedly
+    max_compiled_batches: int = 32
+
+
+_UNSET = object()  # sentinel: a ticket's batch key may legitimately be None
+
+
+@dataclasses.dataclass(eq=False)  # identity eq: the queue removes by ticket
+class Ticket:
+    """One submitted query's handle: admission verdict, then the result."""
+
+    query: AnalyticsQuery
+    accepted: bool
+    reject_reason: Optional[str] = None
+    submit_s: float = 0.0
+    done_s: Optional[float] = None
+    result: Optional[executor.EngineResult] = None
+    # a query that failed planning/execution completes with the error
+    # recorded instead of killing the server loop (result stays None)
+    error: Optional[str] = None
+    # pump() memoizes the fused-epoch key here so a ticket is planned at
+    # most once while queued (a >128-table queue would otherwise thrash
+    # the engine's explain memo and replan per pump scan)
+    batch_key_cache: Any = _UNSET
+
+    @property
+    def done(self) -> bool:
+        return self.done_s is not None
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        """Queue wait + execution (submit -> completion)."""
+        return None if self.done_s is None else self.done_s - self.submit_s
+
+
+# ---------------------------------------------------------------------------
+# cross-query batching
+# ---------------------------------------------------------------------------
+
+
+def _vsplit(keys):
+    """Batched ``rng, sub = jax.random.split(rng)`` — bit-identical to
+    the per-query split (threefry is elementwise over keys)."""
+    out = jax.vmap(jax.random.split)(keys)
+    return out[:, 0], out[:, 1]
+
+
+# batched (PRNGKey(seed), fold_in(PRNGKey(seed), PERM_STREAM_SALT)) —
+# one dispatch for the whole batch's init rngs + ordering streams,
+# bit-identical to the executor's per-query derivation
+_vseed = jax.jit(jax.vmap(lambda s: (
+    jax.random.PRNGKey(s),
+    jax.random.fold_in(
+        jax.random.PRNGKey(s), executor.PERM_STREAM_SALT
+    ),
+)))
+
+# the same gather the ordering policies use (ordering._permute)
+_take = ordering_lib._permute
+
+
+def _permuted_lane(agg, unroll: int):
+    """One lane's serial fold that follows a permutation through the
+    table instead of folding a materialized shuffled copy — the row
+    gather rides inside the scan, so a fused batch never writes B
+    permuted copies of the table. Produces exactly ``fold(agg, state,
+    data[perm])``: same rows, same order, same floats."""
+
+    def lane(state, data, perm):
+        def body(s, p):
+            ex = jax.tree.map(lambda x: x[p], data)
+            return agg.transition(s, ex), None
+
+        state, _ = jax.lax.scan(body, state, perm, unroll=unroll)
+        return state
+
+    return lane
+
+
+@dataclasses.dataclass
+class _BatchedPlan:
+    """Fused executables for one (fused-epoch key, batch size, epochs)."""
+
+    agg: Any
+    task: Any
+    plan: planner_lib.Plan
+    # "fused": run_fn receives the raw table(s) + unsplit rng keys and
+    # performs the ordering's shuffles (and their rng splits) on device;
+    # "fixed": the epoch stream is prepared once outside (prep_fn /
+    # stacking) and run_fn only consumes the per-epoch executor splits
+    mode: str
+    # (states, examples_or_data, keys) -> (states, keys): the ENTIRE
+    # multi-epoch run as one compiled call (scan over epochs around a
+    # vmap over queries) — zero per-epoch host dispatch
+    run_fn: Callable
+    prep_fn: Optional[Callable]  # fixed shuffle_once: one batched gather
+    loss_fn: Callable  # jit(vmap(full_loss))
+    init_fn: Callable  # jit(vmap(agg.initialize))
+    trace_counter: Dict[str, int]
+
+
+class ServingEngine:
+    """Admission control + cross-query batching over one ``Engine``.
+
+    Single-pump execution model: ``submit`` only enqueues (admission is
+    O(1) and never blocks on planning); ``pump`` takes the queue head,
+    fuses every compatible queued query with it (up to ``max_batch``),
+    and executes the group — so "concurrency" is the fused batch, which
+    is the honest model on a single accelerator. ``drain`` pumps until
+    the queue is empty."""
+
+    def __init__(
+        self,
+        config: ServeConfig = ServeConfig(),
+        engine: Optional[executor.Engine] = None,
+    ):
+        if engine is None:
+            store = PlanStore(config.cache_dir) if config.cache_dir else None
+            engine = executor.Engine(plan_store=store)
+        elif config.cache_dir and engine.plan_store is None:
+            # an explicitly passed engine still honors the cache_dir knob
+            # (silently dropping it would re-probe on every restart —
+            # the exact cost the knob exists to eliminate)
+            engine.plan_store = PlanStore(config.cache_dir)
+        self.engine = engine
+        self.config = config
+        self._queue: collections.deque = collections.deque()
+        self._queued_per_task: collections.Counter = collections.Counter()
+        self._batched: Dict[Tuple, _BatchedPlan] = {}
+        self.stats = {
+            "accepted": 0,
+            "rejected": 0,
+            "batches": 0,
+            "batched_queries": 0,
+            "singleton_queries": 0,
+            "failed_queries": 0,
+        }
+
+    # -- admission --------------------------------------------------------
+
+    def submit(self, query: AnalyticsQuery) -> Ticket:
+        now = time.perf_counter()
+        if len(self._queue) >= self.config.max_queue:
+            self.stats["rejected"] += 1
+            return Ticket(query, False, REJECT_QUEUE_FULL, submit_s=now)
+        if self._queued_per_task[query.task] >= self.config.max_per_task:
+            self.stats["rejected"] += 1
+            return Ticket(query, False, REJECT_TASK_LIMIT, submit_s=now)
+        ticket = Ticket(query, True, submit_s=now)
+        self._queue.append(ticket)
+        self._queued_per_task[query.task] += 1
+        self.stats["accepted"] += 1
+        return ticket
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self._queue)
+
+    # -- batching ---------------------------------------------------------
+
+    def _batch_key(self, query: AnalyticsQuery) -> Optional[Tuple]:
+        """The fused-epoch key, or None when the query must run solo.
+
+        Early-stop queries (tolerance / target_loss) need per-query epoch
+        counts; MRS plans carry per-query reservoirs. Both keep the
+        singleton path (which also serves them from the compiled-plan
+        cache)."""
+        if query.target_loss is not None or query.tolerance:
+            return None
+        if query.memory_budget_bytes is not None:
+            # fusing stacks up to max_batch tables into one allocation —
+            # B× the footprint the planner budgeted as feasible; honor
+            # the budget by keeping budgeted queries singleton
+            return None
+        try:
+            plan = self.engine.explain(query).chosen
+        except Exception:  # unplannable: let the singleton path report it
+            return None
+        if plan.scheme == "mrs":
+            return None
+        return (query.cache_key_fields(), query.epochs, plan)
+
+    def _ticket_key(self, ticket: Ticket) -> Optional[Tuple]:
+        if ticket.batch_key_cache is _UNSET:
+            ticket.batch_key_cache = self._batch_key(ticket.query)
+        return ticket.batch_key_cache
+
+    def pump(self) -> int:
+        """Serve the queue head (plus everything batchable with it).
+        Returns the number of queries completed."""
+        if not self._queue:
+            return 0
+        head = self._queue.popleft()
+        self._queued_per_task[head.query.task] -= 1
+        group = [head]
+        key = self._ticket_key(head)
+        if key is not None and self.config.max_batch > 1:
+            # stop scanning once the batch is full, and never force
+            # planning (_ticket_key -> explain -> micro-probes) on a
+            # ticket whose cheap key prefix already rules fusion out —
+            # a heterogeneous queue must not pay the whole queue's
+            # planning inside the head query's latency
+            matches = []
+            for t in self._queue:
+                if len(matches) >= self.config.max_batch - 1:
+                    break
+                q = t.query
+                if (q.cache_key_fields(), q.epochs) != (key[0], key[1]):
+                    continue
+                if self._ticket_key(t) == key:
+                    matches.append(t)
+            for t in matches:
+                self._queue.remove(t)
+                self._queued_per_task[t.query.task] -= 1
+            group.extend(matches)
+
+        # one bad query must not take the server loop (or the rest of the
+        # queue) down with it: failures complete the ticket with an error
+        try:
+            if len(group) == 1:
+                head.result = self.engine.run(head.query)
+                head.done_s = time.perf_counter()
+                self.stats["singleton_queries"] += 1
+            else:
+                self._run_batch(group, key[2])
+                self.stats["batches"] += 1
+                self.stats["batched_queries"] += len(group)
+        except Exception as e:  # noqa: BLE001
+            now = time.perf_counter()
+            for t in group:
+                if t.done_s is None:
+                    t.error = f"{type(e).__name__}: {e}"
+                    t.done_s = now
+            self.stats["failed_queries"] += len(group)
+        return len(group)
+
+    def drain(self) -> int:
+        """Pump until the queue is empty; returns queries completed."""
+        total = 0
+        while True:
+            done = self.pump()
+            if not done:
+                return total
+            total += done
+
+    # -- batched execution ------------------------------------------------
+
+    def _batched_compile(
+        self,
+        query: AnalyticsQuery,
+        plan: planner_lib.Plan,
+        batch: int,
+        shared_table: bool,
+    ) -> _BatchedPlan:
+        key = (
+            query.cache_key_fields(), plan, batch, shared_table,
+            query.epochs,
+        )
+        hit = self._batched.get(key)
+        if hit is not None:
+            return hit
+        _, task, agg = self.engine._aggregate_for(query)
+        # The singleton plan's unroll was probed for a single fold; the
+        # vmapped executable has a very different overhead/compute balance
+        # (wider per-step ops want deeper unroll). Re-probe on a stacked
+        # slab — measured, not guessed, same as the planner's calibration.
+        plan = dataclasses.replace(
+            plan,
+            unroll=self._probe_batch_unroll(
+                query, agg, plan, batch, shared_table
+            ),
+        )
+        raw = executor.build_epoch_fn(task, agg, plan)
+        n = query.n_examples
+        epochs = query.epochs
+        ordering = plan.ordering
+        serial = plan.scheme == "serial"
+        data_axis = None if shared_table else 0
+        vperm = jax.vmap(lambda k: jax.random.permutation(k, n))
+
+        def epoch_scan(body, states, keys):
+            (states, keys), _ = jax.lax.scan(
+                body, (states, keys), None, length=epochs
+            )
+            return states, keys
+
+        prep_fn = None
+        if serial and ordering in ("shuffle_once", "shuffle_always"):
+            # serial fold through the permutation indices: the shuffle is
+            # a per-step row gather inside the scan — no lane ever
+            # materializes a permuted copy of the table. The rng splits
+            # (one for each ordering shuffle, one per executor epoch)
+            # replicate the singleton path exactly.
+            mode = "fused"
+            vlane = jax.vmap(
+                _permuted_lane(agg, plan.unroll),
+                in_axes=(0, data_axis, 0),
+            )
+            if ordering == "shuffle_once":
+
+                def run(states, data, keys):
+                    keys, psubs = _vsplit(keys)  # ShuffleOnce's one split
+                    perms = vperm(psubs)
+
+                    def body(carry, _):
+                        st, ks = carry
+                        ks, _ = _vsplit(ks)  # executor's per-epoch split
+                        return (vlane(st, data, perms), ks), None
+
+                    return epoch_scan(body, states, keys)
+
+            else:
+
+                def run(states, data, keys):
+                    def body(carry, _):
+                        st, ks = carry
+                        ks, psubs = _vsplit(ks)
+                        perms = vperm(psubs)
+                        ks, _ = _vsplit(ks)
+                        return (vlane(st, data, perms), ks), None
+
+                    return epoch_scan(body, states, keys)
+
+        elif ordering == "shuffle_always":
+            # non-serial schemes need materialized example arrays; the
+            # per-epoch reshuffle still lives inside the fused run
+            mode = "fused"
+            vtake = jax.vmap(_take, in_axes=(data_axis, 0))
+
+            def run(states, data, keys):
+                def body(carry, _):
+                    st, ks = carry
+                    ks, psubs = _vsplit(ks)
+                    ex = vtake(data, vperm(psubs))
+                    ks, subs = _vsplit(ks)
+                    return (jax.vmap(raw)(st, ex, subs), ks), None
+
+                return epoch_scan(body, states, keys)
+
+        else:
+            # fixed epoch stream: clustered (any scheme) streams the
+            # stored order; non-serial shuffle_once gathers once outside
+            mode = "fixed"
+            ex_axis = (
+                None if (shared_table and ordering == "clustered") else 0
+            )
+            vraw = jax.vmap(raw, in_axes=(0, ex_axis, 0))
+
+            def run(states, examples, keys):
+                def body(carry, _):
+                    st, ks = carry
+                    ks, subs = _vsplit(ks)
+                    return (vraw(st, examples, subs), ks), None
+
+                return epoch_scan(body, states, keys)
+
+            if ordering == "shuffle_once":
+                prep_fn = jax.jit(jax.vmap(
+                    lambda d, k: _take(d, jax.random.permutation(k, n)),
+                    in_axes=(data_axis, 0),
+                ))
+
+        counter = {"traces": 0}
+        # when every query in the batch reads the same table object, the
+        # objective evaluation broadcasts it instead of stacking B copies
+        loss_axes = (0, None) if shared_table else (0, 0)
+        compiled = _BatchedPlan(
+            agg=agg,
+            task=task,
+            plan=plan,
+            mode=mode,
+            run_fn=executor._counted_jit(run, counter, donate_argnums=(0,)),
+            prep_fn=prep_fn,
+            loss_fn=jax.jit(jax.vmap(task.full_loss, in_axes=loss_axes)),
+            init_fn=jax.jit(jax.vmap(agg.initialize)),
+            trace_counter=counter,
+        )
+        # bound the retained executables (FIFO, like Engine._reports)
+        while len(self._batched) >= self.config.max_compiled_batches:
+            self._batched.pop(next(iter(self._batched)))
+        self._batched[key] = compiled
+        return compiled
+
+    def _probe_batch_unroll(
+        self,
+        query: AnalyticsQuery,
+        agg,
+        plan: planner_lib.Plan,
+        batch: int,
+        shared_table: bool,
+    ) -> int:
+        """Measure the batched fold's best scan unroll on a slab (once
+        per fused-epoch key; the executables are cached). Probes the same
+        variant that will run: the permuted lane for shuffle orderings,
+        the plain vmapped fold for the stored order."""
+        if plan.scheme != "serial":
+            return plan.unroll  # only the serial fold exposes the knob
+        cands = sorted({plan.unroll, 8, 16})
+        rows = min(query.n_examples, probes.PROBE_ROWS)
+        cands = [u for u in cands if u <= rows]
+        if len(cands) <= 1:
+            return plan.unroll
+        states = jax.vmap(agg.initialize)(
+            jnp.stack([jax.random.PRNGKey(i) for i in range(batch)])
+        )
+        permuted = plan.ordering in ("shuffle_once", "shuffle_always")
+        data_axis = None if shared_table else 0
+        if shared_table:
+            slab = jax.tree.map(lambda x: x[:rows], query.data)
+        else:
+            slab = jax.tree.map(
+                lambda x: jnp.stack([x[:rows]] * batch), query.data
+            )
+        # real (random) permutations: the run gathers rows in shuffled
+        # order, and an identity gather has a different memory-access
+        # cost that could mis-rank the unroll candidates
+        perms = (
+            jax.vmap(lambda k: jax.random.permutation(k, rows))(
+                jax.random.split(jax.random.PRNGKey(0), batch)
+            )
+            if permuted else None
+        )
+        best, best_t = plan.unroll, float("inf")
+        for u in cands:
+            # probe the exact variant the run will use: same lane, same
+            # broadcast-vs-stacked table axis
+            if permuted:
+                fold_u = jax.jit(jax.vmap(
+                    _permuted_lane(agg, u), in_axes=(0, data_axis, 0)
+                ))
+                args = (states, slab, perms)
+            else:
+                fold_u = jax.jit(jax.vmap(
+                    lambda s, ex, u=u: uda_lib.fold(agg, s, ex, unroll=u),
+                    in_axes=(0, data_axis),
+                ))
+                args = (states, slab)
+            # min-of-k, not median: serving probes run on a loaded box,
+            # and contention only ever inflates a sample
+            jax.block_until_ready(fold_u(*args))
+            t = float("inf")
+            for _ in range(5):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fold_u(*args))
+                t = min(t, time.perf_counter() - t0)
+            if t < best_t:
+                best, best_t = u, t
+        return best
+
+    def _run_batch(self, tickets: List[Ticket], plan: planner_lib.Plan):
+        """Stack the group along a new query axis and execute the whole
+        multi-epoch run as ONE compiled call. Per-query RNG streams and
+        ordering semantics replicate the singleton executor bit-for-bit
+        (vmapped threefry splits/permutations equal the per-query ones),
+        so a fused query returns the same model it would have gotten
+        from ``Engine.run``."""
+        queries = [t.query for t in tickets]
+        q0 = queries[0]
+        b = len(queries)
+        ids0 = tuple(id(x) for x in jax.tree.leaves(q0.data))
+        shared_table = all(
+            tuple(id(x) for x in jax.tree.leaves(q.data)) == ids0
+            for q in queries[1:]
+        )
+        compiled = self._batched_compile(q0, plan, b, shared_table)
+        base, keys = _vseed(jnp.asarray([q.seed for q in queries]))
+        states = compiled.init_fn(base)
+
+        t0 = time.perf_counter()
+        if compiled.mode == "fixed" and plan.ordering == "shuffle_once":
+            # ShuffleOnce consumes one split, then streams the same
+            # permuted copy every epoch — one batched gather up front
+            keys, subs = _vsplit(keys)
+            source = (
+                q0.data if shared_table
+                else jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *[q.data for q in queries]
+                )
+            )
+            examples = compiled.prep_fn(source, subs)
+        elif shared_table:
+            # one shared table: fused runs shuffle it on device in-run;
+            # clustered lanes stream it in place
+            examples = q0.data
+        else:
+            examples = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *[q.data for q in queries]
+            )
+        jax.block_until_ready(examples)
+        t1 = time.perf_counter()
+        states, _ = compiled.run_fn(states, examples, keys)
+        jax.block_until_ready(states)
+        shuffle_s = t1 - t0
+        grad_s = time.perf_counter() - t1
+
+        models = jax.vmap(compiled.agg.terminate)(states)
+        if shared_table:
+            loss_src = q0.data
+        elif compiled.mode == "fixed" and plan.ordering == "shuffle_once":
+            # examples holds the PERMUTED stack; the objective wants the
+            # stored order (only branch that must stack a second time)
+            loss_src = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *[q.data for q in queries]
+            )
+        else:
+            loss_src = examples  # already the raw stacked tables
+        # parity with the singleton executor: an epochs=0 run never
+        # evaluates the objective (Engine.run returns losses=[])
+        if q0.epochs:
+            losses = jax.device_get(compiled.loss_fn(models, loss_src))
+        else:
+            losses = None
+        done = time.perf_counter()
+        for i, t in enumerate(tickets):
+            t.result = executor.EngineResult(
+                model=jax.tree.map(lambda x: x[i], models),
+                losses=[float(losses[i])] if losses is not None else [],
+                epochs=q0.epochs,
+                converged=False,
+                plan=compiled.plan,  # incl. the re-probed batch unroll
+                report=None,
+                # amortized: the whole batch paid this once
+                shuffle_seconds=shuffle_s / b,
+                gradient_seconds=grad_s / b,
+                trace_count=compiled.trace_counter["traces"],
+                batch_size=b,
+            )
+            t.done_s = done
+
+    def cache_info(self) -> Dict[str, int]:
+        return dict(
+            self.stats,
+            batched_plans=len(self._batched),
+            **self.engine.cache_info(),
+        )

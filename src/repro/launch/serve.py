@@ -1,11 +1,60 @@
-"""Serving step builders: batched prefill and KV-cache decode."""
+"""Serving entry points.
+
+Two serving surfaces share this module:
+
+* **LM serving**: batched prefill and KV-cache decode step builders
+  (``make_prefill_step`` / ``make_decode_step``), used by
+  ``examples/serve_lm.py``.
+* **Analytics serving**: the engine's high-QPS front-end
+  (``repro.engine.serve``) — ``make_analytics_server`` builds a
+  ``ServingEngine`` (admission control + cross-query batching + optional
+  persistent plan cache) and ``serve_analytics`` runs a submit-and-drain
+  load, returning the tickets. ``benchmarks/serve_bench.py`` drives its
+  offered-load sweeps through these.
+"""
 
 from __future__ import annotations
+
+from typing import Iterable, List, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.engine import serve as serve_lib
 from repro.models import lm
+
+
+def make_analytics_server(
+    *,
+    cache_dir: Optional[str] = None,
+    max_queue: int = 64,
+    max_per_task: int = 32,
+    max_batch: int = 8,
+) -> serve_lib.ServingEngine:
+    """An analytics ``ServingEngine`` with the given admission knobs."""
+    return serve_lib.ServingEngine(
+        serve_lib.ServeConfig(
+            max_queue=max_queue,
+            max_per_task=max_per_task,
+            max_batch=max_batch,
+            cache_dir=cache_dir,
+        )
+    )
+
+
+def serve_analytics(
+    queries: Iterable,
+    *,
+    server: Optional[serve_lib.ServingEngine] = None,
+    **server_kw,
+) -> List[serve_lib.Ticket]:
+    """Submit ``queries`` (admission-controlled), drain the queue, and
+    return one ticket per query — rejected ones carry ``reject_reason``
+    instead of a result."""
+    srv = server if server is not None else make_analytics_server(**server_kw)
+    tickets = [srv.submit(q) for q in queries]
+    srv.drain()
+    return tickets
 
 
 def make_prefill_step(cfg):

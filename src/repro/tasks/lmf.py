@@ -5,8 +5,13 @@
 Per-rating IGD touches only row L_i and row R_j — ``jax.grad`` through the
 row gathers produces the sparse scatter-add update (the Gemulla et al. /
 Bismarck LMF transition). Regularization is localized to the touched rows,
-scaled by the rows' appearance counts (the standard weighted trick), so the
-transition stays O(rank)."""
+scaled down by the rows' expected appearance counts (the standard weighted
+trick), so the transition stays O(rank): summing the per-example penalty
+over one epoch recovers ~``mu * ||L,R||_F^2`` exactly once, matching
+``full_loss``. The degrees therefore MUST reflect the table
+(``n_ratings / n_rows`` and ``n_ratings / n_cols``); the 1.0 defaults mean
+"each row rated once" and over-penalize dense tables by the mean degree —
+pass them explicitly or use :meth:`degrees_for`."""
 
 from __future__ import annotations
 
@@ -26,9 +31,19 @@ class LowRankMF(Task):
     mu: float = 1e-2
     init_scale: float = 0.1
     # expected #ratings per row/col, used to apportion the global
-    # Frobenius penalty onto per-example terms
+    # Frobenius penalty onto per-example terms (see module docstring)
     mean_row_degree: float = 1.0
     mean_col_degree: float = 1.0
+
+    @staticmethod
+    def degrees_for(n_rows: int, n_cols: int, n_ratings: int) -> dict:
+        """Degree apportionment for a table of ``n_ratings`` triples —
+        splice into ``task_args`` so the local regularizer sums to the
+        global Frobenius penalty once per epoch."""
+        return {
+            "mean_row_degree": max(n_ratings / max(n_rows, 1), 1.0),
+            "mean_col_degree": max(n_ratings / max(n_cols, 1), 1.0),
+        }
 
     def init_model(self, rng):
         kl, kr = jax.random.split(rng)
