@@ -114,6 +114,7 @@ def main() -> None:
         roofline,
         scalability,
         serve_bench,
+        shard_bench,
         tasks_runtime,
     )
 
@@ -122,12 +123,13 @@ def main() -> None:
         "overhead": overhead,  # Tables 2/3
         "fig7": tasks_runtime,  # Fig 7(A)(B)
         "fig8": ordering_bench,  # Fig 8
-        "fig9": parallel_schemes,  # Fig 9
+        "fig9": parallel_schemes,  # Fig 9 (single-device simulator)
         "fig10": mrs_bench,  # Fig 10
         "table4": scalability,  # Table 4
         "roofline": roofline,  # framework roofline (§Roofline)
         "engine": engine_bench,  # repro.engine smoke (plan + cache)
         "serve": serve_bench,  # high-QPS serving front-end
+        "parallel": shard_bench,  # Fig 9 on a real mesh (engine.shard)
     }
     if args.only and args.only not in suites:
         raise SystemExit(

@@ -21,6 +21,9 @@ if [[ "${1:-}" != "--fast" ]]; then
   python -m benchmarks.run --only engine --json .
   echo "== serve smoke benchmark =="
   python -m benchmarks.run --only serve --json .
+  echo "== shard smoke benchmark (forced 8-device host mesh) =="
+  XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m benchmarks.run --only parallel --json .
 fi
 
 echo "CHECK OK"

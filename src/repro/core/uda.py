@@ -126,6 +126,23 @@ def fold(uda: UDA, state, examples, unroll: int = 1):
     return state
 
 
+def gather_fold(uda: UDA, state, data, perm, unroll: int = 1):
+    """Fold ``transition`` over ``data[perm]`` WITHOUT materializing the
+    permuted copy: the row gather rides inside the scan. Produces exactly
+    ``fold(uda, state, data[perm])`` — same rows, same order, same floats
+    — and is the shuffle-ordering lane of both the fused serving batches
+    (``repro.engine.serve``) and the sharded blocks
+    (``repro.dist.data_parallel``); keep them on THIS one implementation
+    or their bit-parity guarantees drift apart."""
+
+    def body(s, p):
+        ex = jax.tree.map(lambda x: x[p], data)
+        return uda.transition(s, ex), None
+
+    state, _ = jax.lax.scan(body, state, perm, unroll=unroll)
+    return state
+
+
 def fold_jit(uda: UDA):
     """A jitted fold with donated state (the aggregate runs in place)."""
 
@@ -142,7 +159,15 @@ def segmented_fold(uda: UDA, state, examples, num_segments: int):
     Splits the stream into ``num_segments`` contiguous partitions, folds each
     independently from the same incoming state (vmap = the parallel workers),
     then ``merge``s the partial states pairwise. On a real mesh the vmap axis
-    is a data-parallel mesh axis; semantics are identical.
+    is a data-parallel mesh axis (``repro.dist.data_parallel``); semantics
+    are identical.
+
+    Each worker folds with its merge weight ZEROED: a partial state must
+    carry only its own contribution, or re-segmenting an already-merged
+    state (the epoch loop's steady state) compounds the incoming weight
+    into every lane — weight grew x(num_segments+1) per epoch and
+    overflowed float32 into NaN models after ~40 epochs. The outgoing
+    weight is the incoming one plus the examples folded, same as serial.
     """
     n = jax.tree.leaves(examples)[0].shape[0]
     if n % num_segments:
@@ -151,11 +176,16 @@ def segmented_fold(uda: UDA, state, examples, num_segments: int):
         lambda x: x.reshape((num_segments, n // num_segments) + x.shape[1:]),
         examples,
     )
-    states = jax.vmap(lambda ex: fold(uda, state, ex))(seg)
+    lane_state = state
+    if isinstance(state, IGDState):
+        lane_state = IGDState(state.model, state.step, jnp.float32(0.0))
+    states = jax.vmap(lambda ex: fold(uda, lane_state, ex))(seg)
 
     merged = jax.tree.map(lambda x: x[0], states)
     for i in range(1, num_segments):
         merged = uda.merge(merged, jax.tree.map(lambda x, i=i: x[i], states))
+    if isinstance(state, IGDState):
+        merged = IGDState(merged.model, merged.step, state.weight + n)
     return merged
 
 

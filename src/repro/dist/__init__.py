@@ -1,4 +1,5 @@
 """Distribution layer: partition-spec derivation, activation-sharding
-constraints, and cross-shard collectives for the LM substrate."""
+constraints, cross-shard collectives for the LM substrate, and the
+shared-nothing data-parallel IGD blocks behind ``repro.engine.shard``."""
 
-from repro.dist import collectives, sharding  # noqa: F401
+from repro.dist import collectives, data_parallel, sharding  # noqa: F401

@@ -21,7 +21,7 @@ from repro.engine.executor import CompiledPlan, Engine, EngineResult, build_epoc
 from repro.engine.planner import Plan, PlanReport, label_clusteredness  # noqa: F401
 from repro.engine.query import AnalyticsQuery  # noqa: F401
 from repro.engine.serve import PlanStore, ServeConfig, ServingEngine, Ticket  # noqa: F401
-from repro.engine import probes, sweep  # noqa: F401
+from repro.engine import probes, shard, sweep, xla_cache  # noqa: F401
 
 # The default process-wide engine: callers share one compiled-plan cache,
 # which is the point (repeat queries hit compiled plans).

@@ -54,6 +54,13 @@ class TaskSpec:
     # technique depend on table statistics the user shouldn't have to
     # remember — e.g. LMF's degree apportionment.
     derive_args: Optional[Callable[[dict, int], dict]] = None
+    # Non-convex objective: model averaging across shards can cancel
+    # (factor rotations) instead of combine, so the planner caps sharded
+    # plans at small shard counts and penalizes their convergence rate
+    # (measured: tuple-partitioned lmf diverges at k=8, converges with a
+    # quality penalty at k<=4 — the stratified DSGD schedule that fixes
+    # this properly is a ROADMAP item).
+    nonconvex: bool = False
 
     def make_task(self, **task_args):
         return self.factory(**task_args)
@@ -68,19 +75,25 @@ def register_task(
     step_size: Optional[Callable[[int], igd.StepSize]] = None,
     prox: Callable[[Any], Callable] = _no_prox,
     derive_args: Optional[Callable[[dict, int], dict]] = None,
+    nonconvex: bool = False,
 ):
     """Class decorator registering a ``Task`` under ``name``.
 
     ``step_size``: n_examples -> StepSize (default: diminishing 0.1/epoch).
     ``prox``: task -> prox rule (default: identity).
     ``derive_args``: (task_args, n_examples) -> args the engine derives
-    from the live table when the user left them unset (default: none)."""
+    from the live table when the user left them unset (default: none).
+    ``nonconvex``: the objective is non-convex — the planner limits the
+    sharded plan axis for it (model averaging is unsafe at high shard
+    counts; default: convex)."""
     step = step_size or (lambda n: igd.diminishing(0.1, decay=max(n, 1)))
 
     def deco(cls):
         if name in _REGISTRY:
             raise ValueError(f"task {name!r} already registered")
-        _REGISTRY[name] = TaskSpec(name, cls, step, prox, derive_args)
+        _REGISTRY[name] = TaskSpec(
+            name, cls, step, prox, derive_args, nonconvex
+        )
         return cls
 
     return deco
@@ -159,6 +172,7 @@ register_task(
     "lmf",
     step_size=lambda n: igd.diminishing(0.1, decay=max(n, 1)),
     derive_args=_lmf_derive_degrees,
+    nonconvex=True,
 )(tasks_lib.LowRankMF)
 
 register_task(

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 
 from repro.core import convergence, mrs as mrs_lib, ordering as ordering_lib
 from repro.core import parallel as parallel_lib, uda as uda_lib
-from repro.engine import catalog, planner as planner_lib
+from repro.engine import catalog, planner as planner_lib, xla_cache
 from repro.engine.query import AnalyticsQuery
 
 _ORDERINGS = {
@@ -147,6 +147,9 @@ class Engine:
         self._reports: Dict[Tuple, Tuple] = {}
         self.plan_store = plan_store
         self.stats = _fresh_stats()
+        # opt-in (REPRO_COMPILATION_CACHE_DIR): compiled executables
+        # survive process restarts alongside the PlanStore's plans
+        xla_cache.maybe_enable()
 
     # -- planning ---------------------------------------------------------
 
@@ -200,6 +203,9 @@ class Engine:
             query.epochs,
             query.memory_budget_bytes,
             tuple(sorted(query.hints.items())),
+            # plans (and their mesh-probed shard placements) are only
+            # valid for the device topology they were planned on
+            jax.local_device_count(),
         )
 
     # -- compilation cache ------------------------------------------------
@@ -218,14 +224,23 @@ class Engine:
         counter = {"traces": 0}
         loss_counter = {"traces": 0}
 
-        # Every non-MRS scheme's state is dead after the epoch call, so the
-        # aggregate runs in place (donation). The MRS carry aliases one
-        # zero buffer as both reservoirs on epoch 1, which donation
-        # forbids, and the swap needs the undonated buffer objects.
-        donate = (0,) if plan.scheme != "mrs" else ()
-        epoch_fn = _counted_jit(
-            build_epoch_fn(task, agg, plan), counter, donate_argnums=donate
-        )
+        if plan.parallelism == "sharded":
+            # the sharded subsystem manages its own block executables
+            # (one per block length), counted on the same trace counter
+            from repro.engine import shard as shard_lib
+
+            epoch_fn = shard_lib.ShardedRunner(task, agg, plan, counter)
+        else:
+            # Every non-MRS scheme's state is dead after the epoch call,
+            # so the aggregate runs in place (donation). The MRS carry
+            # aliases one zero buffer as both reservoirs on epoch 1,
+            # which donation forbids, and the swap needs the undonated
+            # buffer objects.
+            donate = (0,) if plan.scheme != "mrs" else ()
+            epoch_fn = _counted_jit(
+                build_epoch_fn(task, agg, plan), counter,
+                donate_argnums=donate,
+            )
         loss_fn = _counted_jit(
             lambda model, data: task.full_loss(model, data), loss_counter
         )
@@ -291,6 +306,10 @@ def _execute(
     report: Optional[planner_lib.PlanReport],
 ) -> EngineResult:
     plan = compiled.plan
+    if plan.parallelism == "sharded":
+        from repro.engine import shard as shard_lib
+
+        return shard_lib.execute(compiled, query, report)
     agg = compiled.agg
     data = query.data
     n = query.n_examples

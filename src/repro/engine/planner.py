@@ -34,11 +34,20 @@ SEGMENT_CANDIDATES = (2, 4, 8)
 SM_SCHEMES = ("lock", "aig", "nolock")
 SM_WORKERS = 8
 MRS_RATIO = 2
+# Merge periods enumerated for sharded plans (filtered to divisors of the
+# epoch budget so a run compiles ONE block length).
+MERGE_PERIOD_CANDIDATES = (1, 5, 10, 20)
+# Non-convex tasks (catalog ``nonconvex=True``): model averaging of
+# misaligned factors can cancel instead of combine — cap the shard count
+# (measured: tuple-partitioned lmf diverges at k=8, holds at k<=4).
+NONCONVEX_SHARD_CAP = 4
 # Convergence-penalty cap for a fully label-clustered scan (paper Fig. 5:
 # orders of magnitude more epochs; 50x is enough to always reject it).
 CLUSTERED_PENALTY_CAP = 50.0
 # Per-step overhead factor of the shared-memory simulator (ravel/unravel +
-# ring-buffer bookkeeping around each transition).
+# ring-buffer bookkeeping around each transition). The simulator runs on
+# ONE device — its cost model claims no parallel speedup (it exists to
+# reproduce Fig. 9's convergence behavior, not to be fast).
 SM_OVERHEAD = 3.0
 
 
@@ -55,9 +64,24 @@ class Plan:
     mrs_buffer: int = 0
     mrs_ratio: int = MRS_RATIO
     unroll: int = 1
+    # -- the parallel-execution axis (repro.engine.shard) ------------------
+    # singleton: one device runs the scheme above. sharded: the table is
+    # partitioned into num_shards shared-nothing segments laid out over
+    # shard_devices mesh devices, trained as merge-period-H local SGD
+    # (serial folds per shard; pure-UDA model-averaging merges).
+    parallelism: str = "singleton"  # singleton | sharded
+    num_shards: int = 1
+    merge_period: int = 1  # H: epochs between cross-shard merges
+    shard_devices: int = 1  # probed placement (shards/devices vmap lanes)
 
     def describe(self) -> str:
-        if self.scheme == "serial":
+        if self.parallelism == "sharded":
+            ex = (
+                f"sharded fold ({self.num_shards} shards over "
+                f"{self.shard_devices} device(s), merge every "
+                f"{self.merge_period} epoch(s), unroll={self.unroll})"
+            )
+        elif self.scheme == "serial":
             ex = f"serial fold (unroll={self.unroll})"
         elif self.scheme == "segmented":
             ex = (
@@ -132,6 +156,12 @@ class PlanReport:
             f" us/row, shuffle={self.calibration.shuffle_per_row * 1e6:.2f}"
             f" us/row]",
         ]
+        chosen_note = next(
+            (c.note for c in self.candidates
+             if c.plan == self.chosen and c.note), "",
+        )
+        if chosen_note:
+            lines.insert(1, f"why    : {chosen_note}")
         for c in sorted(self.candidates, key=lambda c: c.cost_seconds)[1:]:
             cost = (
                 "infeasible"
@@ -198,7 +228,9 @@ def label_clusteredness(data) -> float:
 # ---------------------------------------------------------------------------
 
 
-def _conv_multiplier(plan: Plan, clusteredness: float) -> Tuple[float, str]:
+def _conv_multiplier(
+    plan: Plan, clusteredness: float, nonconvex: bool = False
+) -> Tuple[float, str]:
     """Relative epochs-to-tolerance vs the shuffle-once serial baseline."""
     mult = 1.0
     note = ""
@@ -214,7 +246,18 @@ def _conv_multiplier(plan: Plan, clusteredness: float) -> Tuple[float, str]:
             note = f"label-clustered scan: ~{penalty:.0f}x more epochs"
     elif plan.ordering == "shuffle_always":
         mult *= 0.95  # marginally better per-epoch rate (paper Fig. 5)
-    if plan.scheme == "segmented":
+    if plan.parallelism == "sharded":
+        # the compensated step schedule keeps the averaged trajectory at
+        # the serial rate (BENCH_parallel pins the loss delta within 5%);
+        # a small staleness/averaging guard still breaks ties toward
+        # simpler plans when the measured speedup is marginal
+        mult *= (1.0 + 0.02 * (1.0 - 1.0 / plan.num_shards)
+                 + 0.02 * (1.0 - 1.0 / plan.merge_period))
+        if nonconvex:
+            # averaged non-convex factors lose real progress per merge
+            # (BENCH_parallel lmf rows measure the penalty)
+            mult *= 1.0 + 0.1 * (plan.num_shards - 1)
+    elif plan.scheme == "segmented":
         mult *= 1.0 + 0.1 * (plan.num_segments - 1)  # model-averaging loss
     elif plan.scheme == "shared_memory":
         mult *= 1.1 if plan.sm_scheme != "lock" else 1.0
@@ -227,12 +270,12 @@ def _plan_cost(
     cal: probes.Calibration,
     clusteredness: float,
     shuffle_feasible: bool,
+    nonconvex: bool = False,
 ) -> Candidate:
     n = query.n_examples
     epochs = max(query.epochs, 1)
-    n_dev = jax.device_count()
 
-    mult, note = _conv_multiplier(plan, clusteredness)
+    mult, note = _conv_multiplier(plan, clusteredness, nonconvex)
     est_epochs = min(epochs * mult, epochs * CLUSTERED_PENALTY_CAP)
 
     if plan.ordering != "clustered" and not shuffle_feasible:
@@ -244,20 +287,57 @@ def _plan_cost(
     fold_row = cal.fold_per_row.get(plan.unroll) or min(
         cal.fold_per_row.values()
     )
-    shuffles = {"clustered": 0.0, "shuffle_once": 1.0,
-                "shuffle_always": est_epochs}[plan.ordering]
-    cost = cal.shuffle_per_row * n * shuffles
+    if plan.parallelism == "sharded":
+        # shuffle orderings on the sharded path never materialize a
+        # host-side copy: the permutation gather rides inside every
+        # epoch's scan (uda.gather_fold), costed below per epoch
+        cost = 0.0
+    else:
+        shuffles = {"clustered": 0.0, "shuffle_once": 1.0,
+                    "shuffle_always": est_epochs}[plan.ordering]
+        cost = cal.shuffle_per_row * n * shuffles
 
-    if plan.scheme == "serial":
+    if plan.parallelism == "sharded":
+        point = cal.shard.get(plan.num_shards)
+        # per-row gather surcharge of the in-scan permutation lanes
+        # (the probe measures the contiguous segments mode; the gather
+        # cost is anchored on the measured shuffle-gather constant)
+        gather_row = (
+            cal.shuffle_per_row if plan.ordering != "clustered" else 0.0
+        )
+        if point is not None:
+            # mesh-probed, not modeled: steady-state local-epoch cost plus
+            # the fixed per-block cost at merge period H
+            blocks = math.ceil(est_epochs / plan.merge_period)
+            cost += (
+                (point.epoch_seconds_per_row + gather_row) * n * est_epochs
+            )
+            cost += point.block_seconds * blocks
+            speedup = fold_row / max(point.epoch_seconds_per_row, 1e-12)
+            probe_note = (
+                f"mesh-probed {speedup:.2f}x/epoch over "
+                f"{point.devices} device(s)"
+            )
+            note = f"{note}; {probe_note}" if note else probe_note
+        else:
+            # hint-forced without a probed mesh point (single device or
+            # un-probed k): no claimed speedup
+            cost += (fold_row + gather_row) * n * est_epochs
+            cost += cal.merge_seconds * plan.num_shards * math.ceil(
+                est_epochs / plan.merge_period
+            )
+            probe_note = "sharded without a mesh probe: modeled at serial cost"
+            note = f"{note}; {probe_note}" if note else probe_note
+    elif plan.scheme == "serial":
         cost += fold_row * n * est_epochs
     elif plan.scheme == "segmented":
-        speedup = max(1, min(plan.num_segments, n_dev))
-        per_epoch = fold_row * n / speedup
+        # measured vmap'd segmented fold (interpolated off the probed
+        # point), not the old min(k, device_count) claim
+        per_epoch = cal.seg_per_row_at(plan.num_segments) * n
         per_epoch += cal.merge_seconds * (plan.num_segments - 1)
         cost += per_epoch * est_epochs
     elif plan.scheme == "shared_memory":
-        speedup = max(1, min(plan.sm_workers, n_dev))
-        cost += SM_OVERHEAD * fold_row * n * est_epochs / speedup
+        cost += SM_OVERHEAD * fold_row * n * est_epochs
     else:  # mrs: 1 I/O step + ratio memory steps per streamed tuple
         cost += fold_row * n * (1 + plan.mrs_ratio) * est_epochs
 
@@ -279,8 +359,61 @@ def _mrs_buffer_rows(query: AnalyticsQuery) -> int:
     return int(min(rows, n))
 
 
-def enumerate_plans(query: AnalyticsQuery, unroll: int) -> List[Plan]:
+def _merge_periods(epochs: int, hints: dict) -> List[int]:
+    if "merge_period" in hints:
+        h = int(hints["merge_period"])
+        if h < 1:
+            raise ValueError(
+                f"merge_period hint must be >= 1 epoch, got {h}"
+            )
+        return [h]
+    epochs = max(epochs, 1)
+    cands = [h for h in MERGE_PERIOD_CANDIDATES
+             if h <= epochs and epochs % h == 0]
+    return cands or [1]
+
+
+def _sharded_plans(
+    query: AnalyticsQuery, unroll: int, cal, hints: dict, orderings: List[str]
+) -> List[Plan]:
+    """Sharded candidates: mesh-probed shard counts that divide the table
+    (or a hint-forced configuration), one per merge period. The intra-
+    shard epoch is the serial fold — segmentation IS the parallelism.
+    Non-convex tasks are capped at NONCONVEX_SHARD_CAP shards (an
+    explicit num_shards hint overrides)."""
+    from repro.engine import catalog
+
+    n = query.n_examples
+    plans: List[Plan] = []
+    if "num_shards" in hints:
+        ks = [int(hints["num_shards"])]
+    elif cal is not None:
+        ks = sorted(cal.shard)
+        try:
+            if catalog.get(query.task).nonconvex:
+                ks = [min(k, NONCONVEX_SHARD_CAP) for k in ks]
+        except KeyError:
+            pass
+    else:
+        ks = []
+    for k in dict.fromkeys(ks):
+        if k < 1 or n % k:
+            continue
+        point = cal.shard.get(k) if cal is not None else None
+        d = point.devices if point is not None else 1
+        u = point.unroll if point is not None else unroll
+        for o in orderings:
+            for h in _merge_periods(query.epochs, hints):
+                plans.append(Plan(
+                    o, "serial", unroll=u, parallelism="sharded",
+                    num_shards=k, merge_period=h, shard_devices=d,
+                ))
+    return plans
+
+
+def enumerate_plans(query: AnalyticsQuery, unroll: int, cal=None) -> List[Plan]:
     SCHEMES = ("serial", "segmented", "shared_memory", "mrs")
+    PARALLELISMS = ("singleton", "sharded")
     hints = dict(query.hints)
     if "ordering" in hints and hints["ordering"] not in ORDERINGS:
         raise ValueError(
@@ -290,6 +423,19 @@ def enumerate_plans(query: AnalyticsQuery, unroll: int) -> List[Plan]:
     if "scheme" in hints and hints["scheme"] not in SCHEMES:
         raise ValueError(
             f"unknown scheme hint {hints['scheme']!r}; valid: {SCHEMES}"
+        )
+    if "parallelism" in hints and hints["parallelism"] not in PARALLELISMS:
+        raise ValueError(
+            f"unknown parallelism hint {hints['parallelism']!r}; "
+            f"valid: {PARALLELISMS}"
+        )
+    if hints.get("parallelism") == "sharded" and hints.get("scheme") not in (
+        None, "serial",
+    ):
+        raise ValueError(
+            "parallelism='sharded' implies scheme='serial' (each shard "
+            "runs the serial fold; segmentation IS the parallelism) — "
+            f"conflicting scheme hint {hints['scheme']!r}"
         )
     if hints.get("scheme") == "mrs" and hints.get("ordering") not in (
         None, "clustered",
@@ -303,29 +449,43 @@ def enumerate_plans(query: AnalyticsQuery, unroll: int) -> List[Plan]:
     plans: List[Plan] = []
     orderings = [hints["ordering"]] if "ordering" in hints else list(ORDERINGS)
     schemes = [hints["scheme"]] if "scheme" in hints else list(SCHEMES)
-    for o in orderings:
-        for s in schemes:
-            if s == "serial":
-                plans.append(Plan(o, "serial", unroll=unroll))
-            elif s == "segmented":
-                ks = (
-                    [hints["num_segments"]]
-                    if "num_segments" in hints
-                    else [k for k in SEGMENT_CANDIDATES if n % k == 0]
-                )
-                plans.extend(
-                    Plan(o, "segmented", num_segments=k, unroll=unroll)
-                    for k in ks
-                )
-            elif s == "shared_memory":
-                plans.extend(
-                    Plan(o, "shared_memory", sm_scheme=sm) for sm in SM_SCHEMES
-                )
-            elif s == "mrs" and (o == "clustered" or "scheme" in hints):
-                # MRS exists to avoid the shuffle: stream in stored order
-                plans.append(
-                    Plan("clustered", "mrs", mrs_buffer=_mrs_buffer_rows(query))
-                )
+    if hints.get("parallelism") != "sharded":
+        for o in orderings:
+            for s in schemes:
+                if s == "serial":
+                    plans.append(Plan(o, "serial", unroll=unroll))
+                elif s == "segmented":
+                    ks = (
+                        [hints["num_segments"]]
+                        if "num_segments" in hints
+                        else [k for k in SEGMENT_CANDIDATES if n % k == 0]
+                    )
+                    plans.extend(
+                        Plan(o, "segmented", num_segments=k, unroll=unroll)
+                        for k in ks
+                    )
+                elif s == "shared_memory":
+                    plans.extend(
+                        Plan(o, "shared_memory", sm_scheme=sm)
+                        for sm in SM_SCHEMES
+                    )
+                elif s == "mrs" and (o == "clustered" or "scheme" in hints):
+                    # MRS exists to avoid the shuffle: stream stored order
+                    plans.append(Plan(
+                        "clustered", "mrs",
+                        mrs_buffer=_mrs_buffer_rows(query),
+                    ))
+    if (
+        hints.get("parallelism") in (None, "sharded")
+        and hints.get("scheme") in (None, "serial")
+        and query.epochs >= 1
+    ):
+        plans.extend(_sharded_plans(query, unroll, cal, hints, orderings))
+    if hints.get("parallelism") == "sharded" and not plans:
+        raise ValueError(
+            "parallelism='sharded' needs a probed mesh point or an explicit "
+            "num_shards hint that divides the table"
+        )
     return list(dict.fromkeys(plans))  # Plan is frozen/hashable
 
 
@@ -339,9 +499,15 @@ def plan(query: AnalyticsQuery, agg) -> PlanReport:
         or query.data_bytes <= query.memory_budget_bytes
     )
     unroll = cal.best_unroll()
+    from repro.engine import catalog
+
+    try:
+        nonconvex = catalog.get(query.task).nonconvex
+    except KeyError:
+        nonconvex = False
     cands = [
-        _plan_cost(p, query, cal, clustered, shuffle_feasible)
-        for p in enumerate_plans(query, unroll)
+        _plan_cost(p, query, cal, clustered, shuffle_feasible, nonconvex)
+        for p in enumerate_plans(query, unroll, cal)
     ]
     if not cands:
         raise ValueError(

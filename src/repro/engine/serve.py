@@ -65,7 +65,9 @@ from repro.engine.query import AnalyticsQuery
 
 # Bump when the on-disk entry layout (or anything the planner persists)
 # changes shape: version-mismatched entries are ignored and rewritten.
-FORMAT_VERSION = 1
+# v2: Plan grew the parallelism axis; Calibration grew the mesh-probed
+# segmented/sharded cost tables (repro.engine.shard).
+FORMAT_VERSION = 2
 
 REJECT_QUEUE_FULL = "queue_full"
 REJECT_TASK_LIMIT = "task_limit"
@@ -221,18 +223,12 @@ _take = ordering_lib._permute
 
 def _permuted_lane(agg, unroll: int):
     """One lane's serial fold that follows a permutation through the
-    table instead of folding a materialized shuffled copy — the row
-    gather rides inside the scan, so a fused batch never writes B
-    permuted copies of the table. Produces exactly ``fold(agg, state,
-    data[perm])``: same rows, same order, same floats."""
+    table instead of folding a materialized shuffled copy
+    (``uda.gather_fold``) — the row gather rides inside the scan, so a
+    fused batch never writes B permuted copies of the table."""
 
     def lane(state, data, perm):
-        def body(s, p):
-            ex = jax.tree.map(lambda x: x[p], data)
-            return agg.transition(s, ex), None
-
-        state, _ = jax.lax.scan(body, state, perm, unroll=unroll)
-        return state
+        return uda_lib.gather_fold(agg, state, data, perm, unroll=unroll)
 
     return lane
 
@@ -338,6 +334,10 @@ class ServingEngine:
             return None
         if plan.scheme == "mrs":
             return None
+        if plan.parallelism == "sharded" and plan.ordering != "clustered":
+            # fused sharded batches ride the clustered (pre-partitioned)
+            # stream; shuffle orderings keep per-query singleton runs
+            return None
         return (query.cache_key_fields(), query.epochs, plan)
 
     def _ticket_key(self, ticket: Ticket) -> Optional[Tuple]:
@@ -381,17 +381,25 @@ class ServingEngine:
                 head.result = self.engine.run(head.query)
                 head.done_s = time.perf_counter()
                 self.stats["singleton_queries"] += 1
-            else:
-                self._run_batch(group, key[2])
+            elif self._run_batch(group, key[2]):
                 self.stats["batches"] += 1
                 self.stats["batched_queries"] += len(group)
+            else:
+                # the group declined fusion at run time (sharded plan
+                # over distinct tables): served singleton, still done
+                self.stats["singleton_queries"] += len(group)
         except Exception as e:  # noqa: BLE001
             now = time.perf_counter()
+            errored = 0
             for t in group:
                 if t.done_s is None:
                     t.error = f"{type(e).__name__}: {e}"
                     t.done_s = now
-            self.stats["failed_queries"] += len(group)
+                    errored += 1
+            self.stats["failed_queries"] += errored
+            # tickets already served (the sharded distinct-table fallback
+            # completes them one by one) are successes, not casualties
+            self.stats["singleton_queries"] += len(group) - errored
         return len(group)
 
     def drain(self) -> int:
@@ -404,6 +412,14 @@ class ServingEngine:
             total += done
 
     # -- batched execution ------------------------------------------------
+
+    def _batched_put(self, key: Tuple, compiled: "_BatchedPlan") -> None:
+        """Retain a fused executable, evicting FIFO past the bound (each
+        entry holds compiled XLA code — a long-running server seeing many
+        burst shapes must not accumulate them unboundedly)."""
+        while len(self._batched) >= self.config.max_compiled_batches:
+            self._batched.pop(next(iter(self._batched)))
+        self._batched[key] = compiled
 
     def _batched_compile(
         self,
@@ -535,10 +551,7 @@ class ServingEngine:
             init_fn=jax.jit(jax.vmap(agg.initialize)),
             trace_counter=counter,
         )
-        # bound the retained executables (FIFO, like Engine._reports)
-        while len(self._batched) >= self.config.max_compiled_batches:
-            self._batched.pop(next(iter(self._batched)))
-        self._batched[key] = compiled
+        self._batched_put(key, compiled)
         return compiled
 
     def _probe_batch_unroll(
@@ -607,13 +620,14 @@ class ServingEngine:
                 best, best_t = u, t
         return best
 
-    def _run_batch(self, tickets: List[Ticket], plan: planner_lib.Plan):
+    def _run_batch(self, tickets: List[Ticket], plan: planner_lib.Plan) -> bool:
         """Stack the group along a new query axis and execute the whole
         multi-epoch run as ONE compiled call. Per-query RNG streams and
         ordering semantics replicate the singleton executor bit-for-bit
         (vmapped threefry splits/permutations equal the per-query ones),
         so a fused query returns the same model it would have gotten
-        from ``Engine.run``."""
+        from ``Engine.run``. Returns False when the group fell back to
+        singleton runs instead of fusing."""
         queries = [t.query for t in tickets]
         q0 = queries[0]
         b = len(queries)
@@ -622,6 +636,16 @@ class ServingEngine:
             tuple(id(x) for x in jax.tree.leaves(q.data)) == ids0
             for q in queries[1:]
         )
+        if plan.parallelism == "sharded":
+            if not shared_table:
+                # per-query segment banks would multiply the partitioned
+                # table's footprint; distinct tables stay singleton
+                for t in tickets:
+                    t.result = self.engine.run(t.query)
+                    t.done_s = time.perf_counter()
+                return False
+            self._run_batch_sharded(tickets, plan)
+            return True
         compiled = self._batched_compile(q0, plan, b, shared_table)
         base, keys = _vseed(jnp.asarray([q.seed for q in queries]))
         states = compiled.init_fn(base)
@@ -680,6 +704,82 @@ class ServingEngine:
                 plan=compiled.plan,  # incl. the re-probed batch unroll
                 report=None,
                 # amortized: the whole batch paid this once
+                shuffle_seconds=shuffle_s / b,
+                gradient_seconds=grad_s / b,
+                trace_count=compiled.trace_counter["traces"],
+                batch_size=b,
+            )
+            t.done_s = done
+        return True
+
+    def _run_batch_sharded(self, tickets: List[Ticket], plan):
+        """Fuse same-key queries over ONE shared table into the sharded
+        subsystem: the per-shard local-SGD blocks gain a leading query
+        axis (``ShardedRunner.batched_block``), so B concurrent fits pay
+        one partitioned table and one executable per block length. Init
+        rngs are the batched threefry of the singleton path; the
+        clustered stream consumes no others — per-query results equal
+        ``Engine.run``'s (pinned by tests/test_shard.py)."""
+        from repro.dist import data_parallel as dp
+
+        queries = [t.query for t in tickets]
+        q0 = queries[0]
+        b = len(queries)
+        compiled = self.engine._compile(q0, plan)
+        runner = compiled.epoch_fn  # shard.ShardedRunner
+        n = q0.n_examples
+        mesh = runner.mesh
+
+        key = ("sharded", q0.cache_key_fields(), plan, b, q0.epochs)
+        aux = self._batched.get(key)
+        if aux is None:
+            aux = _BatchedPlan(
+                agg=runner.agg, task=compiled.task, plan=plan,
+                mode="sharded", run_fn=None, prep_fn=None,
+                loss_fn=jax.jit(
+                    jax.vmap(compiled.task.full_loss, in_axes=(0, None))
+                ),
+                init_fn=jax.jit(jax.vmap(runner.agg.initialize)),
+                trace_counter=compiled.trace_counter,
+            )
+            self._batched_put(key, aux)
+
+        t0 = time.perf_counter()
+        leaves = tuple(jax.tree.leaves(q0.data))
+        seg = runner.placed(
+            ("seg", tuple(id(x) for x in leaves)), leaves,
+            lambda: jax.device_put(
+                dp.partition_rows(q0.data, plan.num_shards),
+                dp.shard_sharding(mesh),
+            ),
+        )
+        base, _ = _vseed(jnp.asarray([q.seed for q in queries]))
+        states = aux.init_fn(base)
+        jax.block_until_ready((seg, states))
+        t1 = time.perf_counter()
+        done_epochs = 0
+        while done_epochs < q0.epochs:
+            block_len = min(plan.merge_period, q0.epochs - done_epochs)
+            states = runner.batched_block(block_len, n)(states, seg)
+            done_epochs += block_len
+        jax.block_until_ready(states)
+        shuffle_s = t1 - t0
+        grad_s = time.perf_counter() - t1
+
+        models = jax.vmap(runner.agg.terminate)(states)
+        losses = (
+            jax.device_get(aux.loss_fn(models, q0.data))
+            if q0.epochs else None
+        )
+        done = time.perf_counter()
+        for i, t in enumerate(tickets):
+            t.result = executor.EngineResult(
+                model=jax.tree.map(lambda x: x[i], models),
+                losses=[float(losses[i])] if losses is not None else [],
+                epochs=q0.epochs,
+                converged=False,
+                plan=plan,
+                report=None,
                 shuffle_seconds=shuffle_s / b,
                 gradient_seconds=grad_s / b,
                 trace_count=compiled.trace_counter["traces"],

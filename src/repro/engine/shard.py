@@ -1,0 +1,278 @@
+"""repro.engine.shard — multi-device sharded execution (the engine's
+third pillar, after planning and serving).
+
+The paper's pure-UDA parallelization (§3.3/Fig. 9) — partition the
+table, train partial models, ``merge`` by weighted model averaging — is
+here a *real* execution subsystem rather than the statistical simulator
+in ``repro.core.parallel``: a ``sharded(k, H)`` plan partitions the
+table into ``k`` shared-nothing segments laid out over a device mesh
+(``XLA_FLAGS=--xla_force_host_platform_device_count`` splits the host
+CPU when no accelerators exist — see ``repro.launch.mesh``), and runs
+merge-period-``H`` local SGD: ``H`` epochs of independent per-shard
+serial folds compiled as ONE block (zero host round-trips, zero
+cross-device traffic), then one model-averaging merge — the only sync
+point, where the global model exists, losses are evaluated, and stop
+rules fire.
+
+Two decisions are *measured on the live mesh*, never modeled
+(``repro.engine.probes._probe_sharded``; Vertica's lesson that physical
+layout must be cost-based):
+
+* the **placement** — how the ``k`` segments map onto devices (d devices
+  x k/d vmap lanes each). On a 2-core host, 2 devices beat 8; on a real
+  accelerator pod the full mesh wins. The probe picks; the plan records
+  it (``Plan.shard_devices``).
+* the **speedup** the planner uses to rank sharded against singleton
+  plans — ``engine.explain()`` reports it in the chosen plan's
+  ``why`` line.
+
+Step-size compensation: each shard's step counter advances once per
+*local* example (n/k per epoch), and averaging k lane displacements
+shrinks the effective step by ~k. ``compensated_step_size`` maps the
+registered schedule to ``alpha'(t) = k * alpha(k * t)`` — the linear
+scaling rule for model averaging: the averaged trajectory matches the
+serial schedule's in expectation (and beats it slightly, by gradient
+variance reduction — see BENCH_parallel.json), and ``k = 1`` is the
+identity, making the k=1 sharded path bit-identical to ``Engine.run``
+(pinned by tests/test_shard.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import convergence
+from repro.dist import data_parallel as dp
+# no cycle: executor only imports this module lazily inside its functions
+from repro.engine import executor as executor_lib
+from repro.engine.executor import _counted_jit
+from repro.launch import mesh as mesh_lib
+
+
+def compensated_step_size(step_size: Callable, num_shards: int) -> Callable:
+    """The linear-scaling schedule for k-way model averaging (identity at
+    k=1, so the singleton path is untouched)."""
+    if num_shards == 1:
+        return step_size
+
+    def compensated(t):
+        return num_shards * step_size(num_shards * jnp.asarray(t))
+
+    return compensated
+
+
+def compensated_aggregate(agg, num_shards: int):
+    """The aggregate the shards fold with: same transition/merge, the
+    compensated schedule."""
+    if num_shards == 1:
+        return agg
+    return dataclasses.replace(
+        agg, step_size=compensated_step_size(agg.step_size, num_shards)
+    )
+
+
+class ShardedRunner:
+    """Compiled sharded-block executables for one (query key, plan).
+
+    Lives in the executor's compiled-plan cache as the plan's
+    ``epoch_fn``: repeat queries reuse the jitted blocks (the trace
+    counter stays flat — same observable as the singleton executor).
+    Blocks are keyed by length because the final block of a run may be
+    shorter (``epochs % H``)."""
+
+    def __init__(self, task, agg, plan, trace_counter: Dict[str, int]):
+        self.task = task
+        self.agg = agg  # the registered aggregate (merges, init, terminate)
+        self.agg_sharded = compensated_aggregate(agg, plan.num_shards)
+        self.plan = plan
+        self.trace_counter = trace_counter
+        self._blocks: Dict[Tuple, Callable] = {}
+        # repeat queries over the same live table skip re-partitioning /
+        # re-placing it on the mesh (leaf identity, like Engine._reports;
+        # entries pin their leaves so ids cannot be recycled)
+        self._placed: Dict[Tuple, Tuple] = {}
+
+    def placed(self, key: Tuple, leaves: Tuple, build: Callable):
+        hit = self._placed.get(key)
+        if hit is not None:
+            return hit[1]
+        value = build()
+        while len(self._placed) >= 8:
+            self._placed.pop(next(iter(self._placed)))
+        self._placed[key] = (leaves, value)
+        return value
+
+    @property
+    def mesh(self):
+        return mesh_lib.shard_mesh(self.plan.shard_devices)
+
+    def block(self, mode: str, block_len: int, n_rows: int) -> Callable:
+        key = (mode, block_len, n_rows)
+        fn = self._blocks.get(key)
+        if fn is None:
+            fn = _counted_jit(
+                dp.build_block_fn(
+                    self.agg_sharded, self.mesh,
+                    num_shards=self.plan.num_shards,
+                    block_len=block_len, mode=mode, n_rows=n_rows,
+                    unroll=self.plan.unroll,
+                ),
+                self.trace_counter,
+            )
+            self._blocks[key] = fn
+        return fn
+
+    def batched_block(self, block_len: int, n_rows: int) -> Callable:
+        """Fused-serving variant: a leading query axis over one shared
+        clustered table (``repro.engine.serve`` fans same-key queries
+        into it)."""
+        key = ("batched_segments", block_len, n_rows)
+        fn = self._blocks.get(key)
+        if fn is None:
+            fn = _counted_jit(
+                dp.build_block_fn(
+                    self.agg_sharded, self.mesh,
+                    num_shards=self.plan.num_shards,
+                    block_len=block_len, mode="segments", n_rows=n_rows,
+                    unroll=self.plan.unroll, batched=True,
+                ),
+                self.trace_counter,
+            )
+            self._blocks[key] = fn
+        return fn
+
+
+_MODES = {
+    "clustered": "segments",
+    "shuffle_once": "perm_once",
+    "shuffle_always": "perm_epoch",
+}
+
+
+def place_inputs(
+    runner: ShardedRunner, data, n: int, perm_rng
+) -> Tuple[str, tuple, Optional[jax.Array], Any]:
+    """Lay the epoch stream out on the mesh, replicating the singleton
+    executor's rng derivation so k=1 stays bit-identical:
+
+    * clustered      — contiguous segments, sharded; no rng consumed;
+    * shuffle_once   — ONE split + permutation (ShuffleOnce's), per-shard
+      index slices sharded, table replicated (the gather rides in-scan);
+    * shuffle_always — the table replicated plus the carried key; each
+      in-block epoch performs the ordering's split AND the executor's
+      per-epoch split.
+    """
+    mesh = runner.mesh
+    k = runner.plan.num_shards
+    mode = _MODES[runner.plan.ordering]
+    key = None
+    leaves = tuple(jax.tree.leaves(data))
+    ids = tuple(id(x) for x in leaves)
+    if mode == "segments":
+        seg = runner.placed(
+            ("seg", ids), leaves,
+            lambda: jax.device_put(
+                dp.partition_rows(data, k), dp.shard_sharding(mesh)
+            ),
+        )
+        args = (seg,)
+    elif mode == "perm_once":
+        perm_rng, sub = jax.random.split(perm_rng)
+        perm = jax.random.permutation(sub, n)
+        perms = jax.device_put(
+            perm.reshape(k, n // k), dp.shard_sharding(mesh)
+        )
+        table = runner.placed(
+            ("rep", ids), leaves,
+            lambda: jax.device_put(data, dp.replicated_sharding(mesh)),
+        )
+        args = (table, perms)
+    else:
+        key = perm_rng
+        table = runner.placed(
+            ("rep", ids), leaves,
+            lambda: jax.device_put(data, dp.replicated_sharding(mesh)),
+        )
+        args = (table,)
+    return mode, args, key, perm_rng
+
+
+def execute(compiled, query, report) -> "Any":
+    """Run a sharded plan: per-H-epoch compiled blocks, merged model at
+    every block boundary (where losses/stop rules are evaluated), final
+    merged model out. Mirrors ``executor._execute``'s result contract."""
+    plan = compiled.plan
+    runner: ShardedRunner = compiled.epoch_fn
+    agg = runner.agg
+    data = query.data
+    n = query.n_examples
+    if plan.num_shards < 1 or plan.merge_period < 1:
+        raise ValueError(
+            f"sharded plan needs num_shards >= 1 and merge_period >= 1, "
+            f"got k={plan.num_shards}, H={plan.merge_period}"
+        )
+    if n % plan.num_shards:
+        raise ValueError(
+            f"{n} rows not divisible into {plan.num_shards} shards"
+        )
+    rng = jax.random.PRNGKey(query.seed)
+    perm_rng = jax.random.fold_in(rng, executor_lib.PERM_STREAM_SALT)
+
+    if query.target_loss is not None:
+        stop = lambda losses, epoch: bool(  # noqa: E731
+            losses and losses[-1] <= query.target_loss
+        )
+    elif query.tolerance:
+        stop = convergence.RelativeLossDrop(query.tolerance)
+    else:
+        stop = None
+
+    state = agg.initialize(rng)
+
+    t0 = time.perf_counter()
+    mode, args, key, perm_rng = place_inputs(runner, data, n, perm_rng)
+    jax.block_until_ready(args)
+    shuffle_s = time.perf_counter() - t0
+
+    losses: List[float] = []
+    grad_s = 0.0
+    converged = False
+    done = 0
+    while done < query.epochs:
+        block_len = min(plan.merge_period, query.epochs - done)
+        fn = runner.block(mode, block_len, n)
+        t1 = time.perf_counter()
+        if mode == "perm_epoch":
+            state, key = fn(state, args[0], key)
+        else:
+            state = fn(state, *args)
+        jax.block_until_ready(state)
+        grad_s += time.perf_counter() - t1
+        done += block_len
+        # the merged (global) model exists exactly at block boundaries —
+        # the natural granularity for the objective and stop rules
+        if stop is not None and compiled.loss_fn is not None:
+            losses.append(float(compiled.loss_fn(agg.terminate(state), data)))
+            if stop(losses, done):
+                converged = True
+                break
+    if stop is None and compiled.loss_fn is not None and done:
+        losses.append(float(compiled.loss_fn(agg.terminate(state), data)))
+
+    return executor_lib.EngineResult(
+        model=agg.terminate(state),
+        losses=losses,
+        epochs=done,
+        converged=converged,
+        plan=plan,
+        report=report,
+        shuffle_seconds=shuffle_s,
+        gradient_seconds=grad_s,
+        trace_count=compiled.trace_count,
+        loss_trace_count=compiled.loss_trace_count,
+    )

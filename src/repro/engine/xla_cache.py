@@ -1,0 +1,68 @@
+"""Opt-in jax persistent compilation cache (ROADMAP: "cross-process
+sharing of compiled executables").
+
+The ``PlanStore`` eliminates re-*measuring* and re-*planning* across
+processes; the XLA executables themselves still recompiled per process.
+Setting ``REPRO_COMPILATION_CACHE_DIR=<dir>`` closes that gap: the
+``Engine``/``ServingEngine`` constructors point jax's persistent
+compilation cache at the directory, so a fresh process deserializes
+yesterday's executables instead of re-running XLA. Opt-in by env var
+because the cache trades disk (one file per executable) for compile
+time, a call the operator owns.
+
+The thresholds are zeroed: the engine's jitted epoch functions are small
+(milliseconds of XLA time each), below jax's default "worth persisting"
+cutoffs, and the serving cold-start they add up to is exactly what the
+cache exists to remove.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Dict, Optional
+
+import jax
+
+ENV_VAR = "REPRO_COMPILATION_CACHE_DIR"
+
+# path the cache was enabled for (None = not enabled); enable-once per
+# process: jax's cache dir is global config, not per-engine state
+_state: Dict[str, Optional[str]] = {"path": None, "error": None}
+
+
+def maybe_enable(env: Optional[dict] = None) -> bool:
+    """Enable the persistent compilation cache when ``ENV_VAR`` is set.
+    Returns True when the cache is (already) enabled. Never raises: a
+    bad directory degrades to normal in-process compilation."""
+    path = (os.environ if env is None else env).get(ENV_VAR, "").strip()
+    if not path:
+        return _state["path"] is not None
+    if _state["path"] == path:
+        return True
+    try:
+        os.makedirs(path, exist_ok=True)
+        jax.config.update("jax_compilation_cache_dir", path)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+        try:
+            jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+        except Exception:  # older jax: flag absent; default is fine
+            pass
+        # jax memoizes its cache object on first compile: a process that
+        # already jitted something (planner probes, warmups) would
+        # silently keep running cache-less without this reset
+        try:
+            from jax._src import compilation_cache as _cc
+
+            _cc.reset_cache()
+        except Exception:
+            pass
+        _state["path"] = path
+        _state["error"] = None
+        return True
+    except Exception as e:  # noqa: BLE001 - optional optimization
+        _state["error"] = f"{type(e).__name__}: {e}"
+        return False
+
+
+def status() -> Dict[str, Optional[str]]:
+    return dict(_state)

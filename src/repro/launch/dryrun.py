@@ -1,9 +1,12 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: lower + compile every (architecture x input-shape)
 cell on the production mesh, with NO device allocation (ShapeDtypeStruct
 inputs), and record memory / cost / collective analysis for the roofline.
+
+The production meshes need 512 host devices; ``main()`` requests them
+through ``repro.launch.mesh.force_host_device_count`` (env-respecting —
+an operator's own ``XLA_FLAGS`` survives) instead of the old import-time
+``os.environ`` clobber. Callers importing ``run_cell`` directly (the
+results/ sweep scripts) own that call themselves, before first jax use.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-3b \
@@ -26,12 +29,16 @@ from repro.configs import SHAPES, all_archs, get_arch, shape_applicable
 from repro.core import igd as igd_lib
 from repro.dist import sharding as shd
 from repro.launch import hlo_analysis as hlo
+from repro.launch import mesh as mesh_lib
 from repro.launch.inputs import input_specs
 from repro.launch.mesh import make_production_mesh
 from repro.launch.serve import make_decode_step, make_prefill_step
 from repro.launch.train import make_train_step
 from repro.models import lm
 from repro.optim import IGD, AdamW
+
+# devices needed by the largest mesh this module builds (2 x 16 x 16)
+DRYRUN_DEVICES = 512
 
 
 def build_cell(cfg, shape, mesh, *, grad_accum=8, optimizer="sgd",
@@ -252,6 +259,7 @@ def run_localsgd_cell(arch: str, *, grad_accum=8, merge_period=16,
 
 
 def main():
+    mesh_lib.force_host_device_count(DRYRUN_DEVICES)
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)

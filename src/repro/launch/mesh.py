@@ -1,9 +1,105 @@
-"""Production mesh construction. A FUNCTION (never module-level) so that
-importing this module never touches jax device state."""
+"""Mesh construction and host-device forcing. FUNCTIONS (never
+module-level side effects) so that importing this module never touches
+jax device state — callers decide when the backend comes up."""
 
 from __future__ import annotations
 
+import os
+import re
+import sys
+from typing import Dict, Optional
+
 import jax
+
+# The XLA flag that splits the host CPU into N virtual devices — the CPU
+# stand-in for a real accelerator mesh (dry-runs, shard smokes, tests).
+_FORCE_FLAG = "--xla_force_host_platform_device_count"
+
+
+def forced_host_device_count(env: Optional[Dict[str, str]] = None) -> Optional[int]:
+    """The host-device count already requested in ``XLA_FLAGS`` (None when
+    the flag is absent)."""
+    flags = (os.environ if env is None else env).get("XLA_FLAGS", "")
+    m = re.search(re.escape(_FORCE_FLAG) + r"=(\d+)", flags)
+    return int(m.group(1)) if m else None
+
+
+def force_host_device_count(
+    count: int,
+    *,
+    override: bool = False,
+    env: Optional[Dict[str, str]] = None,
+) -> int:
+    """Request ``count`` forced host devices, respecting the environment.
+
+    Unlike the old import-time ``os.environ["XLA_FLAGS"] = ...`` in
+    ``launch/dryrun.py`` this (a) preserves every other flag already in
+    ``XLA_FLAGS``, (b) keeps an existing forced count that already covers
+    the request (the operator's choice wins unless ``override``), and
+    (c) refuses to lie: if the jax backend is already initialized with
+    fewer devices, the flag cannot take effect and we raise instead of
+    silently running under-provisioned. Returns the effective count.
+    """
+    env = os.environ if env is None else env
+    existing = forced_host_device_count(env)
+    if existing is not None and not override and existing >= count:
+        count = existing
+    else:
+        flags = re.sub(re.escape(_FORCE_FLAG) + r"=\d+", "", env.get("XLA_FLAGS", ""))
+        flags = " ".join(part for part in flags.split() if part)
+        env["XLA_FLAGS"] = (f"{flags} " if flags else "") + f"{_FORCE_FLAG}={count}"
+    if env is os.environ and "jax" in sys.modules and _backend_initialized():
+        have = jax.local_device_count()
+        if have < count:
+            raise RuntimeError(
+                f"XLA backend already initialized with {have} device(s); "
+                f"{_FORCE_FLAG}={count} must be set before the first jax "
+                "device use (call force_host_device_count earlier, or set "
+                "XLA_FLAGS in the launching environment)"
+            )
+    return count
+
+
+def _backend_initialized() -> bool:
+    try:
+        from jax._src import xla_bridge
+
+        return bool(xla_bridge._backends)
+    except Exception:  # pragma: no cover - jax internals moved
+        return True  # assume the worst: too late to force
+
+
+# ---------------------------------------------------------------------------
+# shard meshes (repro.engine.shard / repro.dist.data_parallel)
+# ---------------------------------------------------------------------------
+
+_SHARD_MESHES: dict = {}
+
+
+def shard_device_count() -> int:
+    """Devices available to the sharded execution subsystem."""
+    return jax.local_device_count()
+
+
+def shard_mesh(num_devices: Optional[int] = None):
+    """A 1-D ("shard",) mesh over the first ``num_devices`` local devices
+    (all of them by default). Cached per size — mesh identity matters for
+    jit cache hits. Works the same over forced host devices and real
+    accelerators."""
+    import numpy as np
+
+    d = num_devices or jax.local_device_count()
+    mesh = _SHARD_MESHES.get(d)
+    if mesh is None:
+        devs = jax.local_devices()[:d]
+        if len(devs) < d:
+            raise ValueError(
+                f"requested a {d}-device shard mesh but only "
+                f"{len(devs)} device(s) exist"
+            )
+        mesh = jax.sharding.Mesh(np.asarray(devs), ("shard",))
+        _SHARD_MESHES[d] = mesh
+    return mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
