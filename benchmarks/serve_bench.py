@@ -40,14 +40,15 @@ def run(quick: bool = True):
     epochs = 20  # a realistic fit length (fig7 runs 10-60 epochs)
     data = synthetic.dense_classification(RNG, n, dim)
 
-    def make_q(seed):
+    def make_q(seed, n_epochs=None, hints=None):
         # plan pinned by hints: both sides run the identical physical
         # plan, so the row isolates cross-query batching (and keeps the
         # committed baseline stable when probe timings are noisy)
         return engine.AnalyticsQuery(
             task="logreg", data=data, task_args={"dim": dim},
-            epochs=epochs, tolerance=0.0, seed=seed,
-            hints={"ordering": "shuffle_once", "scheme": "serial"},
+            epochs=epochs if n_epochs is None else n_epochs,
+            tolerance=0.0, seed=seed,
+            hints=hints or {"ordering": "shuffle_once", "scheme": "serial"},
         )
 
     # -- one-at-a-time baseline (compiled-plan cache warm) ---------------
@@ -106,6 +107,79 @@ def run(quick: bool = True):
             f"p99_ms={_pct(lat, 99) * 1e3:.1f};"
             f"speedup={speedup:.2f};max_loss_delta={quality:.2e}",
         ))
+
+    # -- masked-lane fusion: heterogeneous-epoch queries fuse too --------
+    # queries differing ONLY in epochs fuse into one executable with
+    # per-lane budget masks; the fused run pays the LONGEST lane's scan,
+    # so the honest comparison is against serving the same mixed burst
+    # one at a time (each singleton run pays only its own epochs)
+    b = 16
+    mixed = [10 + 5 * (i % 4) for i in range(b)]  # 10/15/20/25 epochs
+    hqs = [make_q(s, n_epochs=mixed[s]) for s in range(b)]
+    best_wall = float("inf")
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        href = [eng.run(q) for q in hqs]
+        best_wall = min(best_wall, time.perf_counter() - t0)
+    hetero_base_qps = b / best_wall
+    srv = make_analytics_server(max_queue=4 * b, max_per_task=4 * b,
+                                max_batch=b)
+    serve_analytics(hqs, server=srv)  # warm the masked executable
+    best_wall, best_tickets = float("inf"), None
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        tickets = serve_analytics(hqs, server=srv)
+        wall = time.perf_counter() - t0
+        if wall < best_wall:
+            best_wall, best_tickets = wall, tickets
+    assert srv.stats["masked_batches"] >= 1, srv.stats
+    quality = max(
+        abs(t.result.losses[-1] - r.losses[-1]) / max(abs(r.losses[-1]), 1e-12)
+        for t, r in zip(best_tickets, href)
+    )
+    rows.append(row(
+        f"serve_fused_hetero_b{b}", best_wall / b,
+        f"qps={b / best_wall:.1f};"
+        f"speedup={(b / best_wall) / hetero_base_qps:.2f};"
+        f"epochs=10-25;max_loss_delta={quality:.2e}",
+    ))
+
+    # -- the previously-impossible composition: sharded x shuffle_always
+    #    x heterogeneous-epoch fused batch (one executable per block
+    #    length, every lane bit-matching its singleton sharded run)
+    b = 8
+    sh_hints = {"parallelism": "sharded", "num_shards": 2,
+                "merge_period": 5, "ordering": "shuffle_always"}
+    mixed = [10 + 10 * (i % 2) for i in range(b)]  # 10/20 epochs
+    sqs = [make_q(s, n_epochs=mixed[s], hints=sh_hints) for s in range(b)]
+    eng.run(sqs[0])  # absorb the sharded block compiles
+    best_wall = float("inf")
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        sref = [eng.run(q) for q in sqs]
+        best_wall = min(best_wall, time.perf_counter() - t0)
+    sh_base_qps = b / best_wall
+    srv = make_analytics_server(max_queue=4 * b, max_per_task=4 * b,
+                                max_batch=b)
+    serve_analytics(sqs, server=srv)  # warm
+    best_wall, best_tickets = float("inf"), None
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        tickets = serve_analytics(sqs, server=srv)
+        wall = time.perf_counter() - t0
+        if wall < best_wall:
+            best_wall, best_tickets = wall, tickets
+    assert srv.stats["masked_batches"] >= 1, srv.stats
+    quality = max(
+        abs(t.result.losses[-1] - r.losses[-1]) / max(abs(r.losses[-1]), 1e-12)
+        for t, r in zip(best_tickets, sref)
+    )
+    rows.append(row(
+        f"serve_fused_sharded_shuffle_b{b}", best_wall / b,
+        f"qps={b / best_wall:.1f};"
+        f"speedup={(b / best_wall) / sh_base_qps:.2f};"
+        f"k=2;H=5;epochs=10-20;max_loss_delta={quality:.2e}",
+    ))
 
     # -- admission control: overload sheds, accepted work completes ------
     srv = make_analytics_server(max_queue=8, max_per_task=8, max_batch=8)

@@ -24,6 +24,8 @@ if [[ "${1:-}" != "--fast" ]]; then
   echo "== shard smoke benchmark (forced 8-device host mesh) =="
   XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python -m benchmarks.run --only parallel --json .
+  echo "== composed-program smoke (4-device mesh x shuffle_always x B=4) =="
+  python scripts/composed_smoke.py
 fi
 
 echo "CHECK OK"

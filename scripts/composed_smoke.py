@@ -1,0 +1,61 @@
+"""Composed-program smoke for scripts/check.sh: a forced 4-device host
+mesh runs a sharded × shuffle_always × B=4 fused (heterogeneous-epoch)
+batch end-to-end, and the EXPLAIN ``why`` line must name every composed
+axis of the EpochProgram IR. Kept as a script (not a test) because the
+device count must be forced before jax initializes."""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "")
+    + " --xla_force_host_platform_device_count=4"
+).strip()
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro import engine  # noqa: E402
+from repro.data import synthetic  # noqa: E402
+from repro.engine import serve  # noqa: E402
+
+assert jax.local_device_count() == 4, jax.local_device_count()
+
+data = synthetic.dense_classification(jax.random.PRNGKey(0), 128, 4)
+hints = {"parallelism": "sharded", "num_shards": 4, "merge_period": 2,
+         "ordering": "shuffle_always", "shard_devices": 4}
+
+
+def q(seed, epochs):
+    return engine.AnalyticsQuery(
+        task="logreg", data=data, task_args={"dim": 4}, seed=seed,
+        epochs=epochs, tolerance=0.0, hints=hints,
+    )
+
+
+# -- EXPLAIN golden: the why line names the composed axes -------------------
+eng = engine.Engine()
+report = eng.explain(q(0, 4))
+why = next(
+    ln for ln in report.describe().splitlines() if ln.startswith("why")
+)
+for token in ("axes:", "ordering=shuffle_always", "parallelism=sharded",
+              "batch=", "source="):
+    assert token in why, (token, why)
+print(why)
+
+# -- the composed run: 4-device mesh × shuffle_always × B=4 fused batch ----
+budgets = (2, 4, 3, 4)
+serial = [eng.run(q(s, e)) for s, e in enumerate(budgets)]
+srv = serve.ServingEngine(serve.ServeConfig(max_batch=4), engine=eng)
+tickets = [srv.submit(q(s, e)) for s, e in enumerate(budgets)]
+srv.drain()
+assert srv.stats["batches"] == 1, srv.stats
+assert srv.stats["masked_batches"] == 1, srv.stats
+for t, ref in zip(tickets, serial):
+    assert t.error is None, t.error
+    assert t.result.batch_size == 4
+    np.testing.assert_allclose(
+        np.asarray(t.result.model), np.asarray(ref.model),
+        rtol=1e-5, atol=1e-7,
+    )
+print("COMPOSED_SMOKE_OK: sharded(k=4)@4dev x shuffle_always x B=4 masked")

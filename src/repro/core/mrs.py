@@ -123,13 +123,20 @@ def run_mrs(
 ):
     """Epoch loop with buffer swapping (Fig. 6). Data is streamed in its
     stored (possibly clustered) order — the whole point of MRS is to avoid
-    any shuffle."""
+    any shuffle.
+
+    The epoch executable goes through the shared compile counter
+    (``repro.core.tracecount``) like every engine path, so MRS retraces
+    are observable in the same process-wide tally instead of hiding in
+    a private ``jax.jit``."""
+    from repro.core.tracecount import counted_jit
+
     state = uda.initialize(rng)
     zero_buf = jax.tree.map(
         lambda x: jnp.zeros((cfg.buffer_size,) + x.shape[1:], x.dtype), data
     )
     buf_a, buf_b = zero_buf, zero_buf
-    epoch_fn = jax.jit(
+    epoch_fn = counted_jit(
         lambda st, ba, bb, act, key: mrs_epoch(uda, st, data, ba, bb, act, cfg, key)
     )
     losses = []

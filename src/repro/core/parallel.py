@@ -105,14 +105,19 @@ def run_shared_memory(
     prox=None,
     ordering=None,
 ):
-    """Epoch loop around ``hogwild_fold`` (mirrors ``uda.run_igd``)."""
+    """Epoch loop around ``hogwild_fold`` (mirrors ``uda.run_igd``).
+
+    The fold executable goes through the shared compile counter
+    (``repro.core.tracecount``) — same retrace observability as every
+    engine-compiled path."""
     from repro.core import ordering as ordering_lib
+    from repro.core.tracecount import counted_jit
 
     ordering = ordering or ordering_lib.ShuffleOnce()
     model = task.init_model(rng)
     n = jax.tree.leaves(data)[0].shape[0]
     perm_rng = jax.random.fold_in(rng, 7)
-    folder = jax.jit(
+    folder = counted_jit(
         lambda m, ex, r: hogwild_fold(task, step_size, m, ex, r, cfg, prox)
     )
     losses = []

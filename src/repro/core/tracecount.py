@@ -1,0 +1,44 @@
+"""The shared compile/trace counter.
+
+Every jitted executable the system builds — the engine's epoch
+functions, the fused serving runs, the sharded blocks, and the
+standalone drivers in ``repro.core.mrs`` / ``repro.core.parallel`` —
+goes through ``counted_jit`` so retraces are one process-wide
+observable instead of per-module private ``jax.jit`` calls nobody can
+audit. ``EngineResult.trace_count`` (and the cache tests that pin it to
+zero on repeat queries) read per-executable counters; ``GLOBAL`` sums
+every retrace in the process, including the paths that predate the
+engine (``run_mrs``, ``run_shared_memory``).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+
+# Process-wide retrace tally across every counted executable. Mutated in
+# place (never rebound) so importers can hold a reference.
+GLOBAL: Dict[str, int] = {"traces": 0}
+
+
+def fresh_counter() -> Dict[str, int]:
+    return {"traces": 0}
+
+
+def counted_jit(fn, counter: Optional[Dict[str, int]] = None, **jit_kw):
+    """``jax.jit(fn)`` that bumps ``counter['traces']`` (and the
+    process-wide ``GLOBAL`` tally) on every retrace — the observable for
+    'repeat query compiles nothing'."""
+
+    def traced(*args):
+        GLOBAL["traces"] += 1
+        if counter is not None:
+            counter["traces"] += 1
+        return fn(*args)
+
+    return jax.jit(traced, **jit_kw)
+
+
+def global_traces() -> int:
+    return GLOBAL["traces"]

@@ -1,29 +1,25 @@
-"""Shared-nothing data-parallel IGD over a device mesh (paper §3.3 at
-mesh scale).
+"""Mesh-layout and merge primitives for shared-nothing data-parallel
+IGD (paper §3.3 at mesh scale).
 
-The paper's pure-UDA parallelization — partition the table, train a
-partial model per partition, combine with ``merge`` (weighted model
-averaging) — is realized here as a *merge-period-H local-SGD block*
-compiled under ``shard_map`` over a 1-D ("shard",) mesh:
+The *construction* of the merge-period-H local-SGD blocks — the
+``shard_map`` programs that run H epochs of independent per-shard folds
+and one model-averaging merge — lives in ``repro.engine.program``
+(``build_shard_block``), the one compiler every execution path shares.
+This module keeps the pieces the compiler and its drivers lay data out
+with:
 
-* the table's ``num_shards`` partitions are laid out over the mesh's
-  ``num_devices`` devices (``num_devices`` divides ``num_shards``; the
-  extra partitions become vmap lanes per device, so the same plan shape
-  serves an 8-accelerator pod and a 2-core host — the *placement* is a
-  probed physical decision, see ``repro.engine.probes``);
-* one block = ``block_len`` epochs of independent per-lane folds with NO
-  cross-device traffic, then ONE merge: lanes merge locally, devices
-  merge via an ``all_gather`` of the (model-sized) partial states — the
-  paper's merge tree, with communication only at the period-H sync
-  points (Zinkevich model averaging / local SGD);
-* the incoming and outgoing state is a single *replicated* aggregate
-  state, so a ``num_shards=1`` block is the serial fold bit-for-bit and
-  callers (``repro.engine.shard``) carry one state regardless of k.
+* ``partition_rows`` — the RDBMS partition layout ([n, ...] leaves into
+  [k, n/k, ...] contiguous shared-nothing segments);
+* ``shard_sharding`` / ``replicated_sharding`` — the two placements a
+  block input can ride in;
+* ``merge_stacked`` / ``device_merge`` — the UDA merge tree: fold
+  ``agg.merge`` over a stacked lane bank, then ``all_gather`` the
+  (model-sized) partials across the mesh axis — the only cross-device
+  traffic of a local-SGD block.
 
-Step-size note: lane step counters advance once per *local* example
-(n/k per epoch). ``repro.engine.shard.compensated_step_size`` maps the
-registered schedule onto that counter so the averaged trajectory matches
-the serial one; this module is schedule-agnostic.
+``build_block_fn`` remains as a thin delegating alias so existing
+callers keep working; new code should call
+``repro.engine.program.build_shard_block`` directly.
 """
 
 from __future__ import annotations
@@ -31,11 +27,7 @@ from __future__ import annotations
 from typing import Callable
 
 import jax
-import jax.numpy as jnp
-from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
-
-from repro.core import uda as uda_lib
 
 AXIS = "shard"
 
@@ -67,7 +59,7 @@ def device_merge(agg, state, num_devices: int, *, batched: bool = False):
 
 
 # ---------------------------------------------------------------------------
-# block builder
+# layouts
 # ---------------------------------------------------------------------------
 
 
@@ -90,25 +82,9 @@ def replicated_sharding(mesh):
     return NamedSharding(mesh, P())
 
 
-def _lane_fold(agg, unroll: int):
-    """One lane's epoch over its materialized segment."""
-
-    def fold(state, seg):
-        return uda_lib.fold(agg, state, seg, unroll=unroll)
-
-    return fold
-
-
-def _lane_gather_fold(agg, unroll: int):
-    """One lane's epoch following permutation indices through the
-    replicated table (``uda.gather_fold``): same rows, same order, same
-    floats as folding a materialized permuted copy, without writing one
-    per lane."""
-
-    def fold(state, data, perm):
-        return uda_lib.gather_fold(agg, state, data, perm, unroll=unroll)
-
-    return fold
+# ---------------------------------------------------------------------------
+# compatibility alias
+# ---------------------------------------------------------------------------
 
 
 def build_block_fn(
@@ -121,141 +97,19 @@ def build_block_fn(
     n_rows: int,
     unroll: int = 8,
     batched: bool = False,
+    batch: int = 0,
 ) -> Callable:
-    """One compiled merge-period block: ``block_len`` local epochs then one
-    global merge. Returns the raw (unjitted) function; callers jit it.
+    """Delegates to ``repro.engine.program.build_shard_block`` (the one
+    block compiler). ``batched=True`` is the legacy spelling of a fused
+    query axis; pass ``batch=B`` instead."""
+    from repro.engine import program  # lazy: dist sits below engine
 
-    ``mode`` selects the epoch stream (mirroring the ordering policies):
-
-    * ``"segments"``   — ``block(state, seg)``: contiguous per-lane
-      segments, ``seg`` laid out ``P("shard")`` (clustered ordering);
-    * ``"perm_once"``  — ``block(state, data, perms)``: the table rides
-      replicated, per-lane permutation slices [k, n/k] ride sharded and
-      are re-used every epoch (shuffle-once);
-    * ``"perm_epoch"`` — ``block(state, data, key) -> (state, key)``: a
-      fresh epoch permutation is derived in-run from the replicated key
-      with exactly the singleton executor's split sequence
-      (shuffle-always).
-
-    ``state`` is ONE replicated aggregate state in and out: lanes start
-    from it with their weight zeroed (partial states must carry only
-    their own contribution — see ``uda.segmented_fold``), and the block
-    ends with the lane/device merge tree plus a weight restore.
-    ``batched``: state carries a leading query axis (fused serving
-    batches over one shared table); lanes broadcast over it.
-    """
-    num_devices = mesh.devices.size
-    if num_shards % num_devices:
+    if batched and batch <= 0:
         raise ValueError(
-            f"{num_shards} shards not divisible by {num_devices} devices"
+            "build_block_fn(batched=True) needs the fused lane count: "
+            "pass batch=B"
         )
-    lanes = num_shards // num_devices
-    rows_per_shard = n_rows // num_shards
-    if mode == "segments":
-        lane = _lane_fold(agg, unroll)
-    elif mode in ("perm_once", "perm_epoch"):
-        lane = _lane_gather_fold(agg, unroll)
-    else:
-        raise ValueError(f"unknown block mode {mode!r}")
-
-    def lane_start(state):
-        # partial states carry only their own contribution to the merge
-        # (zeros_like keeps the batched path's [B]-shaped weights)
-        if isinstance(state, uda_lib.IGDState):
-            return uda_lib.IGDState(
-                state.model, state.step, jnp.zeros_like(state.weight)
-            )
-        return state
-
-    def lane_end(merged, state_in):
-        if isinstance(merged, uda_lib.IGDState):
-            folded = jnp.float32(block_len * n_rows)
-            return uda_lib.IGDState(
-                merged.model, merged.step, state_in.weight + folded
-            )
-        return merged
-
-    def epochs_then_merge(state_in, run_epoch):
-        """Broadcast -> block_len local epochs -> merge tree -> restore."""
-        start = lane_start(state_in)
-        states = jax.tree.map(
-            lambda x: jnp.broadcast_to(x[None], (lanes,) + x.shape), start
-        )
-
-        def body(sts, _):
-            return run_epoch(sts), None
-
-        states, _ = jax.lax.scan(body, states, None, length=block_len)
-        merged = merge_stacked(agg, states, lanes, batched=batched)
-        merged = device_merge(agg, merged, num_devices, batched=batched)
-        return lane_end(merged, state_in)
-
-    vmap_lane = jax.vmap  # over the lane axis
-
-    if mode == "segments":
-
-        def inner(state, seg):
-            if batched:
-                run = lambda sts: vmap_lane(  # noqa: E731
-                    lambda s, ex: jax.vmap(lambda sq: lane(sq, ex))(s)
-                )(sts, seg)
-            else:
-                run = lambda sts: vmap_lane(lane)(sts, seg)  # noqa: E731
-            return epochs_then_merge(state, run)
-
-        in_specs = (P(), P(AXIS))
-        out_specs = P()
-
-    elif mode == "perm_once":
-
-        def inner(state, data, perms):
-            run = lambda sts: vmap_lane(  # noqa: E731
-                lambda s, p: lane(s, data, p)
-            )(sts, perms)
-            return epochs_then_merge(state, run)
-
-        in_specs = (P(), P(), P(AXIS))
-        out_specs = P()
-
-    else:  # perm_epoch
-
-        def inner(state, data, key):
-            shard_i = jax.lax.axis_index(AXIS)
-
-            def run_epoch(sts, key):
-                # the singleton stream: ShuffleAlways splits then the
-                # executor splits again (repro.engine.executor._execute)
-                key, sub = jax.random.split(key)
-                perm = jax.random.permutation(sub, n_rows)
-                key, _ = jax.random.split(key)
-                local = jax.lax.dynamic_slice_in_dim(
-                    perm, shard_i * lanes * rows_per_shard,
-                    lanes * rows_per_shard,
-                ).reshape(lanes, rows_per_shard)
-                sts = vmap_lane(lambda s, p: lane(s, data, p))(sts, local)
-                return sts, key
-
-            start = lane_start(state)
-            states = jax.tree.map(
-                lambda x: jnp.broadcast_to(x[None], (lanes,) + x.shape), start
-            )
-
-            def body(carry, _):
-                sts, ky = carry
-                sts, ky = run_epoch(sts, ky)
-                return (sts, ky), None
-
-            (states, key), _ = jax.lax.scan(
-                body, (states, key), None, length=block_len
-            )
-            merged = merge_stacked(agg, states, lanes, batched=batched)
-            merged = device_merge(agg, merged, num_devices, batched=batched)
-            return lane_end(merged, state), key
-
-        in_specs = (P(), P(), P())
-        out_specs = (P(), P())
-
-    return shard_map(
-        inner, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-        check_rep=False,
+    return program.build_shard_block(
+        agg, mesh, num_shards=num_shards, block_len=block_len, mode=mode,
+        n_rows=n_rows, unroll=unroll, batch=batch,
     )

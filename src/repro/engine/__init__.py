@@ -19,9 +19,11 @@ New techniques register through the catalog (see ENGINE.md)::
 from repro.engine.catalog import TaskSpec, get, names, register_task, unregister  # noqa: F401
 from repro.engine.executor import CompiledPlan, Engine, EngineResult, build_epoch_fn  # noqa: F401
 from repro.engine.planner import Plan, PlanReport, label_clusteredness  # noqa: F401
+from repro.engine.program import CompiledProgram, EpochProgram, build_program  # noqa: F401
 from repro.engine.query import AnalyticsQuery  # noqa: F401
 from repro.engine.serve import PlanStore, ServeConfig, ServingEngine, Ticket  # noqa: F401
-from repro.engine import probes, shard, sweep, xla_cache  # noqa: F401
+from repro.engine.table import ChunkedTable  # noqa: F401
+from repro.engine import probes, program, shard, sweep, table, xla_cache  # noqa: F401
 
 # The default process-wide engine: callers share one compiled-plan cache,
 # which is the point (repeat queries hit compiled plans).

@@ -1,14 +1,16 @@
 """Plan execution behind a compiled-plan cache.
 
-The executor lowers a chosen ``Plan`` onto the existing drivers
-(``uda.fold`` / ``uda.segmented_fold`` / ``parallel.hogwild_fold`` /
-``mrs.mrs_epoch``) as ONE jitted epoch function, and memoizes that
-compiled executable keyed by (task, task_args, table signature, plan).
-Serving many analytics queries per second means the same (task, shape)
-pair arrives over and over; a cache hit skips tracing AND XLA compilation
-entirely — the epoch function object is reused, so jax's own jit cache
-is hit by construction. ``trace_count`` on each executable counts actual
-retraces, which the cache test pins to zero across repeated queries.
+The executor is a *driver* over the one program compiler
+(``repro.engine.program``): a chosen ``Plan`` becomes an
+``EpochProgram`` (batch=1), ``build_program`` lowers it to a jitted
+epoch callable (or a ``ShardedRunner`` of compiled blocks), and the
+executable is memoized keyed by (task, task_args, table signature,
+plan). Serving many analytics queries per second means the same (task,
+shape) pair arrives over and over; a cache hit skips tracing AND XLA
+compilation entirely — the epoch function object is reused, so jax's
+own jit cache is hit by construction. ``trace_count`` on each
+executable counts actual retraces, which the cache test pins to zero
+across repeated queries.
 """
 
 from __future__ import annotations
@@ -20,9 +22,11 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import convergence, mrs as mrs_lib, ordering as ordering_lib
-from repro.core import parallel as parallel_lib, uda as uda_lib
-from repro.engine import catalog, planner as planner_lib, xla_cache
+from repro.core import convergence, ordering as ordering_lib
+from repro.core.tracecount import counted_jit as _counted_jit  # noqa: F401
+from repro.engine import catalog, planner as planner_lib, program as program_lib
+from repro.engine import table as table_lib, xla_cache
+from repro.engine.program import PERM_STREAM_SALT, build_epoch_fn  # noqa: F401
 from repro.engine.query import AnalyticsQuery
 
 _ORDERINGS = {
@@ -31,25 +35,6 @@ _ORDERINGS = {
     "shuffle_always": ordering_lib.ShuffleAlways,
 }
 
-# Salt deriving the ordering/permutation rng stream from a query's seed:
-#   perm_rng = fold_in(PRNGKey(seed), PERM_STREAM_SALT)
-# The serving front-end's batched path (repro.engine.serve) replicates
-# this derivation to stay bit-identical with the singleton executor —
-# change it ONLY in both lock-step (the batched-vs-serial test catches a
-# divergence).
-PERM_STREAM_SALT = 0x5EED
-
-
-def _counted_jit(fn, counter: Dict[str, int], **jit_kw):
-    """jit(fn) that bumps ``counter['traces']`` on every retrace — the
-    observable for 'repeat query compiles nothing'."""
-
-    def traced(*args):
-        counter["traces"] += 1
-        return fn(*args)
-
-    return jax.jit(traced, **jit_kw)
-
 
 @dataclasses.dataclass
 class CompiledPlan:
@@ -57,9 +42,9 @@ class CompiledPlan:
 
     key: Tuple
     plan: planner_lib.Plan
-    agg: uda_lib.IGDAggregate
+    agg: Any
     task: Any
-    epoch_fn: Callable  # scheme-specific jitted epoch
+    epoch_fn: Callable  # scheme-specific jitted epoch (or ShardedRunner)
     loss_fn: Optional[Callable]
     trace_counter: Dict[str, int]
     # the objective evaluation retraces on its own cadence (stop rules
@@ -74,53 +59,6 @@ class CompiledPlan:
     @property
     def loss_trace_count(self) -> int:
         return self.loss_trace_counter["traces"]
-
-
-def build_epoch_fn(task, agg, plan: planner_lib.Plan) -> Callable:
-    """The chosen scheme's raw (unjitted) epoch function
-    ``(state_or_carry, examples, rng) -> state_or_carry``.
-
-    Shared by ``Engine._compile`` (which jits it per table signature) and
-    the serving front-end (which vmaps it over a batch of fused queries
-    before jitting — ``repro.engine.serve``)."""
-    if plan.scheme == "serial":
-        return lambda s, ex, rng: uda_lib.fold(agg, s, ex, unroll=plan.unroll)
-    if plan.scheme == "segmented":
-        return lambda s, ex, rng: uda_lib.segmented_fold(
-            agg, s, ex, plan.num_segments
-        )
-    if plan.scheme == "shared_memory":
-        cfg = parallel_lib.SharedMemoryConfig(
-            scheme=plan.sm_scheme, workers=plan.sm_workers
-        )
-
-        def sm_epoch(state, ex, rng):
-            model = parallel_lib.hogwild_fold(
-                task, agg.step_size, state.model, ex, rng, cfg,
-                prox=agg.prox,
-            )
-            n = jax.tree.leaves(ex)[0].shape[0]
-            return uda_lib.IGDState(model, state.step + n, state.weight + n)
-
-        return sm_epoch
-    if plan.scheme == "mrs":
-        if plan.mrs_buffer <= 0:
-            raise ValueError(
-                "an MRS plan needs mrs_buffer > 0 (the planner sizes "
-                "it from the memory budget)"
-            )
-        cfg = mrs_lib.MRSConfig(buffer_size=plan.mrs_buffer,
-                                ratio=plan.mrs_ratio)
-
-        def mrs_epoch(carry, ex, rng):
-            state, buf_a, buf_b, active = carry
-            state, buf_a = mrs_lib.mrs_epoch(
-                agg, state, ex, buf_a, buf_b, active, cfg, rng
-            )
-            return (state, buf_a, buf_b, active)
-
-        return mrs_epoch
-    raise ValueError(f"unknown scheme {plan.scheme!r}")
 
 
 def _fresh_stats() -> Dict[str, int]:
@@ -154,6 +92,8 @@ class Engine:
     # -- planning ---------------------------------------------------------
 
     def _aggregate_for(self, query: AnalyticsQuery):
+        from repro.core import uda as uda_lib
+
         spec = catalog.get(query.task)
         args = dict(query.task_args)
         if spec.derive_args is not None:
@@ -170,9 +110,11 @@ class Engine:
         """Plan the query; memoized on the live table + query knobs.
 
         The table component of the key uses leaf identity (jax arrays
-        are immutable), NOT just shapes: a different table of the same
-        shape may have different statistics and must be re-planned. The
-        serving hot path — the same table queried repeatedly — hits."""
+        are immutable, so a live leaf with the same id IS the same data;
+        a stored ``Table`` handle is itself the identity), NOT just
+        shapes: a different table of the same shape may have different
+        statistics and must be re-planned. The serving hot path — the
+        same table queried repeatedly — hits."""
         leaves = tuple(jax.tree.leaves(query.data))
         plan_key = self._query_plan_key(query)
         key = (plan_key, tuple(id(x) for x in leaves))
@@ -223,24 +165,15 @@ class Engine:
         _, task, agg = self._aggregate_for(query)
         counter = {"traces": 0}
         loss_counter = {"traces": 0}
-
-        if plan.parallelism == "sharded":
-            # the sharded subsystem manages its own block executables
-            # (one per block length), counted on the same trace counter
-            from repro.engine import shard as shard_lib
-
-            epoch_fn = shard_lib.ShardedRunner(task, agg, plan, counter)
-        else:
-            # Every non-MRS scheme's state is dead after the epoch call,
-            # so the aggregate runs in place (donation). The MRS carry
-            # aliases one zero buffer as both reservoirs on epoch 1,
-            # which donation forbids, and the swap needs the undonated
-            # buffer objects.
-            donate = (0,) if plan.scheme != "mrs" else ()
-            epoch_fn = _counted_jit(
-                build_epoch_fn(task, agg, plan), counter,
-                donate_argnums=donate,
-            )
+        compiled_prog = program_lib.build_program(
+            task, agg, program_lib.EpochProgram(plan=plan),
+            n_examples=query.n_examples, counter=counter,
+        )
+        epoch_fn = (
+            compiled_prog.runner
+            if plan.parallelism == "sharded"
+            else compiled_prog.epoch_fn
+        )
         loss_fn = _counted_jit(
             lambda model, data: task.full_loss(model, data), loss_counter
         )
@@ -312,9 +245,23 @@ def _execute(
         return shard_lib.execute(compiled, query, report)
     agg = compiled.agg
     data = query.data
+    stored = table_lib.is_stored_table(data)
+    streaming = plan.source == "table"
+    if streaming and not stored:
+        raise ValueError(
+            "plan.source='table' needs a stored Table (duck-typed: "
+            "is_stored_table); got an in-memory pytree"
+        )
+    if stored and not streaming:
+        # the plan chose random access (shuffle orderings, segmented
+        # layouts): materialize through the one resolve seam
+        data = table_lib.resolve(data)
+    # the objective is a full-table aggregate either way (Table.arrays()
+    # memoizes, so streamed runs pay this once, and only if a loss is
+    # ever evaluated)
+    loss_data = table_lib.resolve(query.data) if stored else data
     n = query.n_examples
-    rng = jax.random.PRNGKey(query.seed)
-    perm_rng = jax.random.fold_in(rng, PERM_STREAM_SALT)
+    rng, perm_rng = program_lib.seed_streams(query.seed)
     ordering = _ORDERINGS[plan.ordering]()
     if query.target_loss is not None:
         stop = lambda losses, epoch: bool(  # noqa: E731
@@ -340,8 +287,11 @@ def _execute(
     epoch = 0
     for epoch in range(1, query.epochs + 1):
         t0 = time.perf_counter()
-        examples, perm_rng = ordering.order(data, n, epoch, perm_rng)
-        jax.block_until_ready(examples)
+        if streaming:
+            examples = data  # the chunk stream IS the stored order
+        else:
+            examples, perm_rng = ordering.order(data, n, epoch, perm_rng)
+            jax.block_until_ready(examples)
         t1 = time.perf_counter()
         perm_rng, sub = jax.random.split(perm_rng)
         if plan.scheme == "mrs":
@@ -358,12 +308,14 @@ def _execute(
         # evaluation after the last epoch suffices (full_loss scans the
         # whole table — not free on the serving path).
         if stop is not None and compiled.loss_fn is not None:
-            losses.append(float(compiled.loss_fn(agg.terminate(state), data)))
+            losses.append(
+                float(compiled.loss_fn(agg.terminate(state), loss_data))
+            )
             if stop(losses, epoch):
                 converged = True
                 break
     if stop is None and compiled.loss_fn is not None and epoch:
-        losses.append(float(compiled.loss_fn(agg.terminate(state), data)))
+        losses.append(float(compiled.loss_fn(agg.terminate(state), loss_data)))
 
     return EngineResult(
         model=agg.terminate(state),

@@ -26,8 +26,13 @@ from typing import List, Tuple
 import jax
 import numpy as np
 
-from repro.engine import probes
+from repro.engine import probes, table as table_lib
+from repro.engine.program import canonical_ordering
 from repro.engine.query import AnalyticsQuery
+
+
+def _is_stored(query: "AnalyticsQuery") -> bool:
+    return table_lib.is_stored_table(query.data)
 
 ORDERINGS = ("clustered", "shuffle_once", "shuffle_always")
 SEGMENT_CANDIDATES = (2, 4, 8)
@@ -73,6 +78,27 @@ class Plan:
     num_shards: int = 1
     merge_period: int = 1  # H: epochs between cross-shard merges
     shard_devices: int = 1  # probed placement (shards/devices vmap lanes)
+    # -- the data-source axis (repro.engine.table) -------------------------
+    # memory: the table is (or is materialized as) one resident pytree.
+    # table: a stored Table's chunk stream is folded in stored order —
+    # the planner picks it for clustered serial singleton plans over a
+    # stored table, where it avoids the materialization entirely.
+    source: str = "memory"  # memory | table
+
+    def axes(self, batch: str = "1") -> str:
+        """The composed-axes line (EXPLAIN's ``why``): one rendering of
+        the EpochProgram IR's four axes for this plan."""
+        if self.parallelism == "sharded":
+            par = (
+                f"sharded(k={self.num_shards}, H={self.merge_period}, "
+                f"{self.shard_devices} dev)"
+            )
+        else:
+            par = f"singleton/{self.scheme}"
+        return (
+            f"ordering={self.ordering} × parallelism={par} × "
+            f"batch={batch} × source={self.source}"
+        )
 
     def describe(self) -> str:
         if self.parallelism == "sharded":
@@ -98,7 +124,8 @@ class Plan:
                 f"buffered MRS (reservoir={self.mrs_buffer}, "
                 f"{self.mrs_ratio} memory steps/tuple)"
             )
-        return f"ordering={self.ordering} · {ex}"
+        src = " · source=table stream" if self.source == "table" else ""
+        return f"ordering={self.ordering} · {ex}{src}"
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -146,6 +173,10 @@ class PlanReport:
     candidates: Tuple[Candidate, ...]
     clusteredness: float
     calibration: probes.Calibration
+    # the composed-axes rendering of the choice (the EpochProgram IR's
+    # ordering × parallelism × batch × source); "" on pre-axes entries,
+    # re-derived from the chosen plan at describe time
+    axes: str = ""
 
     def describe(self) -> str:
         lines = [
@@ -160,8 +191,11 @@ class PlanReport:
             (c.note for c in self.candidates
              if c.plan == self.chosen and c.note), "",
         )
+        axes = self.axes or self.chosen.axes()
+        why = f"axes: {axes}"
         if chosen_note:
-            lines.insert(1, f"why    : {chosen_note}")
+            why += f" — {chosen_note}"
+        lines.insert(1, f"why    : {why}")
         for c in sorted(self.candidates, key=lambda c: c.cost_seconds)[1:]:
             cost = (
                 "infeasible"
@@ -180,6 +214,7 @@ class PlanReport:
             "candidates": [c.to_dict() for c in self.candidates],
             "clusteredness": self.clusteredness,
             "calibration": self.calibration.to_dict(),
+            "axes": self.axes,
         }
 
     @classmethod
@@ -192,6 +227,7 @@ class PlanReport:
             ),
             clusteredness=d["clusteredness"],
             calibration=probes.Calibration.from_dict(d["calibration"]),
+            axes=d.get("axes", ""),
         )
 
 
@@ -264,14 +300,25 @@ def _conv_multiplier(
     return mult, note
 
 
-def _plan_cost(
+def program_cost(
     plan: Plan,
     query: AnalyticsQuery,
     cal: probes.Calibration,
     clusteredness: float,
     shuffle_feasible: bool,
     nonconvex: bool = False,
+    batch: int = 1,
 ) -> Candidate:
+    """THE cost model: one function costs every point of the
+    EpochProgram cross-product — ordering × scheme × parallelism ×
+    source, at any fused batch width — from the same measured
+    constants. (The executor, the sharded subsystem and the serving
+    front-end used to carry three special-cased models; they now all
+    read this one.) ``batch > 1`` amortizes the one-time costs (the
+    materialized shuffle / table read) over the fused lanes; the
+    per-epoch compute term stays per-lane — fused throughput gains come
+    from dispatch amortization, which the serving benchmarks measure
+    rather than this model claiming them."""
     n = query.n_examples
     epochs = max(query.epochs, 1)
 
@@ -296,6 +343,11 @@ def _plan_cost(
         shuffles = {"clustered": 0.0, "shuffle_once": 1.0,
                     "shuffle_always": est_epochs}[plan.ordering]
         cost = cal.shuffle_per_row * n * shuffles
+    if _is_stored(query) and plan.source != "table":
+        # a stored table must be materialized once before any
+        # random-access plan runs (the streaming plan skips this)
+        cost += cal.shuffle_per_row * n
+    cost /= batch  # one-time costs are paid once per fused batch
 
     if plan.parallelism == "sharded":
         point = cal.shard.get(plan.num_shards)
@@ -401,6 +453,16 @@ def _sharded_plans(
             continue
         point = cal.shard.get(k) if cal is not None else None
         d = point.devices if point is not None else 1
+        # placement is normally mesh-probed; the hint is the escape
+        # hatch for forced-topology smokes and experiments
+        d = int(hints.get("shard_devices", d))
+        if k % d:
+            if "num_shards" in hints:
+                # both sides explicitly forced and incompatible: say so
+                raise ValueError(
+                    f"shard_devices={d} must divide num_shards={k}"
+                )
+            continue  # probe-derived k this hint can't place: skip it
         u = point.unroll if point is not None else unroll
         for o in orderings:
             for h in _merge_periods(query.epochs, hints):
@@ -415,6 +477,19 @@ def enumerate_plans(query: AnalyticsQuery, unroll: int, cal=None) -> List[Plan]:
     SCHEMES = ("serial", "segmented", "shared_memory", "mrs")
     PARALLELISMS = ("singleton", "sharded")
     hints = dict(query.hints)
+    if "ordering" in hints:
+        # one source of truth for the IR's ordering names
+        hints["ordering"] = canonical_ordering(hints["ordering"])
+    if "source" in hints and hints["source"] not in ("memory", "table"):
+        raise ValueError(
+            f"unknown source hint {hints['source']!r}; "
+            "valid: ('memory', 'table')"
+        )
+    if hints.get("source") == "table" and not _is_stored(query):
+        raise ValueError(
+            "source='table' needs the query's data to be a stored Table "
+            "(duck-typed: is_stored_table)"
+        )
     if "ordering" in hints and hints["ordering"] not in ORDERINGS:
         raise ValueError(
             f"unknown ordering hint {hints['ordering']!r}; "
@@ -486,14 +561,55 @@ def enumerate_plans(query: AnalyticsQuery, unroll: int, cal=None) -> List[Plan]:
             "parallelism='sharded' needs a probed mesh point or an explicit "
             "num_shards hint that divides the table"
         )
+    # -- the data-source axis: a stored table's clustered serial
+    # singleton plan streams the chunk order (source='table'); every
+    # other combination needs random access and materializes
+    if _is_stored(query):
+        def streams(p: Plan) -> bool:
+            return (p.ordering == "clustered" and p.scheme == "serial"
+                    and p.parallelism == "singleton")
+
+        plans = [
+            dataclasses.replace(p, source="table") if streams(p) else p
+            for p in plans
+        ]
+        if hints.get("source") == "table":
+            plans = [p for p in plans if p.source == "table"]
+            if not plans:
+                raise ValueError(
+                    "source='table' streams the stored chunk order: it "
+                    "requires ordering='clustered' (or 'sequential'), "
+                    "scheme='serial', parallelism='singleton' — the "
+                    "other hints exclude every streaming plan"
+                )
+        elif hints.get("source") == "memory":
+            plans = [dataclasses.replace(p, source="memory") for p in plans]
     return list(dict.fromkeys(plans))  # Plan is frozen/hashable
+
+
+def _batchable(query: AnalyticsQuery, chosen: Plan) -> bool:
+    """Whether the serving front-end may fuse this query into a batched
+    lane (the batching axis): fixed-epoch, unbudgeted, non-MRS."""
+    return (
+        query.target_loss is None
+        and not query.tolerance
+        and query.memory_budget_bytes is None
+        and chosen.scheme != "mrs"
+        and not _is_stored(query)
+    )
 
 
 def plan(query: AnalyticsQuery, agg) -> PlanReport:
     """Choose a physical plan for ``query`` (aggregate ``agg`` is probed
     for calibration)."""
     cal = probes.calibrate(agg, query.data, query.cache_key_fields())
-    clustered = label_clusteredness(query.data)
+    # statistics read a head sample for stored tables — the planner must
+    # not materialize the table just to rank plans for it
+    stats_data = (
+        query.data.probe_slab(min(query.n_examples, 4096))
+        if _is_stored(query) else query.data
+    )
+    clustered = label_clusteredness(stats_data)
     shuffle_feasible = (
         query.memory_budget_bytes is None
         or query.data_bytes <= query.memory_budget_bytes
@@ -506,7 +622,7 @@ def plan(query: AnalyticsQuery, agg) -> PlanReport:
     except KeyError:
         nonconvex = False
     cands = [
-        _plan_cost(p, query, cal, clustered, shuffle_feasible, nonconvex)
+        program_cost(p, query, cal, clustered, shuffle_feasible, nonconvex)
         for p in enumerate_plans(query, unroll, cal)
     ]
     if not cands:
@@ -520,10 +636,12 @@ def plan(query: AnalyticsQuery, agg) -> PlanReport:
             f"no feasible plan for query (budget="
             f"{query.memory_budget_bytes}); candidates: {cands}"
         )
+    batch_axis = "fusable" if _batchable(query, best.plan) else "1"
     return PlanReport(
         chosen=best.plan,
         cost_seconds=best.cost_seconds,
         candidates=tuple(cands),
         clusteredness=clustered,
         calibration=cal,
+        axes=best.plan.axes(batch=batch_axis),
     )

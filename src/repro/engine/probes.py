@@ -133,18 +133,27 @@ def seed(key: Tuple, cal: Calibration) -> None:
 
 
 def calibrate(agg, data, key: Tuple, *, unrolls=(1, 8)) -> Calibration:
-    """Measure the planner's constants on a probe slab of ``data``."""
+    """Measure the planner's constants on a probe slab of ``data``
+    (stored tables hand over their head chunks — the probe measures
+    time, not values, and must not materialize the table)."""
     if key in _CACHE:
         return _CACHE[key]
     stats["probe_runs"] += 1
 
-    n = jax.tree.leaves(data)[0].shape[0]
-    # ONE slab for every per-row constant: comparing a per-row cost
-    # amortized over 256 rows against one amortized over 2048 re-biases
-    # the exact ranking these probes exist to measure (the dispatch
-    # floor inflates the small-slab number)
-    rows = min(n, SHARD_PROBE_ROWS)
-    slab = jax.tree.map(lambda x: x[:rows], data)
+    from repro.engine import table as table_lib
+
+    if table_lib.is_stored_table(data):
+        n = data.n_rows
+        rows = min(n, SHARD_PROBE_ROWS)
+        slab = data.probe_slab(rows)
+    else:
+        n = jax.tree.leaves(data)[0].shape[0]
+        # ONE slab for every per-row constant: comparing a per-row cost
+        # amortized over 256 rows against one amortized over 2048
+        # re-biases the exact ranking these probes exist to measure (the
+        # dispatch floor inflates the small-slab number)
+        rows = min(n, SHARD_PROBE_ROWS)
+        slab = jax.tree.map(lambda x: x[:rows], data)
     rng = jax.random.PRNGKey(0)
 
     # (a) shuffle: permutation + gather, the per-epoch ShuffleAlways cost
@@ -188,7 +197,7 @@ def calibrate(agg, data, key: Tuple, *, unrolls=(1, 8)) -> Calibration:
     shard = {}
     device_count = jax.local_device_count()
     if device_count > 1:
-        shard = _probe_sharded(agg, data, state0, n, task_name=key[0])
+        shard = _probe_sharded(agg, slab, state0, n, task_name=key[0])
 
     cal = Calibration(
         shuffle_per_row=t_shuffle / rows,
@@ -216,19 +225,22 @@ def _min_of(fn, *args, iters: int = 5) -> float:
 
 
 def _probe_sharded(
-    agg, data, state0, n: int, task_name: str = ""
+    agg, probe_slab, state0, n: int, task_name: str = ""
 ) -> Dict[int, "ShardPoint"]:
     """Measure sharded(k) block costs for the largest feasible shard count
     over candidate device placements. Two block lengths (1 and 8 epochs)
     split the measurement into a steady-state per-epoch cost and a fixed
     per-block overhead (dispatch + merge collectives) — the two constants
-    the planner's merge-period-H cost model needs.
+    the planner's merge-period-H cost model needs. The blocks come from
+    the one program compiler (``program.build_shard_block``) so the probe
+    times exactly what will run.
 
     Non-convex tasks probe at their capped shard count (the planner only
     enumerates k <= NONCONVEX_SHARD_CAP for them; probing a k it will
     never plan would leave the reachable candidates without a measured
     point)."""
     from repro.dist import data_parallel as dp
+    from repro.engine import program as program_lib
     from repro.launch import mesh as mesh_lib
 
     k_cap = None
@@ -242,7 +254,8 @@ def _probe_sharded(
             pass
 
     devices = mesh_lib.shard_device_count()
-    rows = min(n, SHARD_PROBE_ROWS)
+    slab_rows = jax.tree.leaves(probe_slab)[0].shape[0]
+    rows = min(n, SHARD_PROBE_ROWS, slab_rows)
     k = next(
         (k for k in _SEG_PROBE_CANDIDATES
          if rows % k == 0 and k > 1 and (k_cap is None or k <= k_cap)),
@@ -250,7 +263,7 @@ def _probe_sharded(
     )
     if k is None:
         return {}
-    slab = jax.tree.map(lambda x: x[:rows], data)
+    slab = jax.tree.map(lambda x: x[:rows], probe_slab)
     d_cands = sorted(
         {d for d in (1, 2, devices) if d <= devices and k % d == 0}
     )
@@ -263,7 +276,7 @@ def _probe_sharded(
         )
         timings = {}
         for block_len in (1, 8):
-            blk = jax.jit(dp.build_block_fn(
+            blk = jax.jit(program_lib.build_shard_block(
                 agg, mesh, num_shards=k, block_len=block_len,
                 mode="segments", n_rows=rows, unroll=_SHARD_LANE_UNROLL,
             ))
@@ -283,6 +296,72 @@ def _probe_sharded(
                 block_seconds=block_s, unroll=_SHARD_LANE_UNROLL,
             )
     return {k: best} if best is not None else {}
+
+
+def probe_batch_unroll(
+    agg, data, n_examples: int, plan, batch: int, shared_table: bool
+) -> int:
+    """Measure the fused (vmapped) fold's best scan unroll on a stacked
+    slab. The singleton plan's unroll was probed for a single fold; the
+    batched executable has a very different overhead/compute balance
+    (wider per-step ops want deeper unroll) — measured, not guessed,
+    with the same methodology as ``calibrate``. Probes the exact
+    variant that will run: the permuted lane for shuffle orderings, the
+    plain vmapped fold for the stored order. (This lived in the serving
+    front-end as its own special case; it is now part of the one probe
+    layer every axis shares.)"""
+    from repro.core import uda as uda_lib
+    from repro.engine import program as program_lib
+
+    if plan.scheme != "serial":
+        return plan.unroll  # only the serial fold exposes the knob
+    cands = sorted({plan.unroll, 8, 16})
+    rows = min(n_examples, PROBE_ROWS)
+    cands = [u for u in cands if u <= rows]
+    if len(cands) <= 1:
+        return plan.unroll
+    states = jax.vmap(agg.initialize)(
+        jnp.stack([jax.random.PRNGKey(i) for i in range(batch)])
+    )
+    permuted = plan.ordering in ("shuffle_once", "shuffle_always")
+    data_axis = None if shared_table else 0
+    if shared_table:
+        slab = jax.tree.map(lambda x: x[:rows], data)
+    else:
+        slab = jax.tree.map(
+            lambda x: jnp.stack([x[:rows]] * batch), data
+        )
+    # real (random) permutations: the run gathers rows in shuffled
+    # order, and an identity gather has a different memory-access
+    # cost that could mis-rank the unroll candidates
+    perms = (
+        jax.vmap(lambda k: jax.random.permutation(k, rows))(
+            jax.random.split(jax.random.PRNGKey(0), batch)
+        )
+        if permuted else None
+    )
+    best, best_t = plan.unroll, float("inf")
+    for u in cands:
+        # probe the exact variant the run will use: same lane, same
+        # broadcast-vs-stacked table axis
+        if permuted:
+            fold_u = jax.jit(jax.vmap(
+                program_lib.permuted_lane(agg, u),
+                in_axes=(0, data_axis, 0),
+            ))
+            args = (states, slab, perms)
+        else:
+            fold_u = jax.jit(jax.vmap(
+                lambda s, ex, u=u: uda_lib.fold(agg, s, ex, unroll=u),
+                in_axes=(0, data_axis),
+            ))
+            args = (states, slab)
+        # min-of-k, not median: serving probes run on a loaded box,
+        # and contention only ever inflates a sample
+        t = _min_of(fold_u, *args, iters=5)
+        if t < best_t:
+            best, best_t = u, t
+    return best
 
 
 def clear_cache() -> None:

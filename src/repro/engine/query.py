@@ -33,7 +33,10 @@ class AnalyticsQuery:
     to buffered MRS (paper §3.4)."""
 
     task: str
-    data: Any  # pytree of arrays, leading dim = rows
+    # a pytree of arrays (leading dim = rows) OR a stored table — any
+    # object satisfying the duck-typed Table protocol
+    # (repro.engine.table): the data-source axis of the EpochProgram IR
+    data: Any
     task_args: Mapping[str, Any] = dataclasses.field(default_factory=dict)
     epochs: int = 20  # max epochs (the paper's outer-loop bound)
     tolerance: float = 1e-3  # relative loss-drop stop (0 = run all epochs)
@@ -43,16 +46,29 @@ class AnalyticsQuery:
     hints: Mapping[str, Any] = dataclasses.field(default_factory=dict)
 
     @property
+    def _stored(self) -> bool:
+        return bool(getattr(self.data, "is_stored_table", False))
+
+    @property
     def n_examples(self) -> int:
+        if self._stored:
+            return self.data.n_rows
         return jax.tree.leaves(self.data)[0].shape[0]
 
     @property
     def data_bytes(self) -> int:
+        if self._stored:
+            return self.data.data_bytes()
         return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(self.data))
 
     def data_signature(self) -> tuple:
         """Shape/dtype signature of the table — part of the plan-cache key
-        (compiled executables are shape-specialized)."""
+        (compiled executables are shape-specialized). A stored table
+        reports the signature of its materialized pytree, so stored and
+        in-memory runs over the same data share plan and calibration
+        caches."""
+        if self._stored:
+            return self.data.signature()
         struct = jax.tree.structure(self.data)
         leaves = tuple(
             (tuple(x.shape), str(x.dtype)) for x in jax.tree.leaves(self.data)
@@ -76,21 +92,10 @@ class AnalyticsQuery:
         label-clustered vs shuffled — exactly what the planner keys on)
         must change the fingerprint, and boundary rows alone can miss
         it."""
-        import hashlib
+        from repro.engine import table as table_lib
 
-        import numpy as np
-
-        h = hashlib.sha256(repr(self.data_signature()).encode())
-        for leaf in jax.tree.leaves(self.data):
-            n = leaf.shape[0] if getattr(leaf, "ndim", 0) else 0
-            if n == 0:
-                continue
-            edge = max(sample_rows // 6, 1)
-            idx = np.unique(np.concatenate([
-                np.arange(min(edge, n)),
-                np.linspace(0, n - 1, num=min(sample_rows, n)).astype(int),
-                np.arange(max(n - edge, 0), n),
-            ]))
-            x = np.asarray(jax.device_get(leaf[idx]))
-            h.update(x.tobytes())
-        return h.hexdigest()[:32]
+        if self._stored:
+            return self.data.content_fingerprint(sample_rows)
+        return table_lib.fingerprint_arrays(
+            self.data_signature(), self.data, sample_rows
+        )

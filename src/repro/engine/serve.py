@@ -10,18 +10,25 @@ engine with three mechanisms:
   (``queue_full`` / ``task_limit``) instead of unbounded queueing.
 
 * **Cross-query batching** (``ServingEngine.pump``): queued queries that
-  share a *fused-epoch key* — same ``(task, task_args, table signature)``
-  (the executor's cache key fields), same epoch budget, same chosen
-  plan — are stacked along a new query axis and the ENTIRE multi-epoch
-  run executes as one compiled call (``lax.scan`` over epochs around a
-  ``vmap`` over queries): N concurrent fits of the same shape cost ~1
-  executable instead of N, with zero per-epoch host dispatch. Per-query
-  rng streams are batched threefry ops (bit-identical to the singleton
-  executor's), shuffle orderings fold through permutation indices
-  in-scan instead of materializing permuted copies, and the batched
-  executable's scan unroll is re-probed on a stacked slab. Queries with
-  an early-stop rule (``tolerance``/``target_loss``) or an MRS plan keep
-  per-query control flow and fall back to singleton ``Engine.run``.
+  share a *fused key* — same ``(task, task_args, table signature)``
+  (the executor's cache key fields) and same chosen plan — are stacked
+  along a new query axis and the ENTIRE multi-epoch run executes as one
+  compiled call, built by the one program compiler
+  (``repro.engine.program.build_program``: ``lax.scan`` over epochs
+  around a ``vmap`` over queries). Queries that differ ONLY in their
+  epoch budget still fuse: every fused run takes per-lane budgets and
+  freezes a lane once its budget is spent (masked-lane fusion), so N
+  heterogeneous fits of the same shape cost ~1 executable instead of N.
+  Per-query rng streams are batched threefry ops (bit-identical to the
+  singleton executor's), shuffle orderings fold through permutation
+  indices in-scan instead of materializing permuted copies, and the
+  batched executable's scan unroll is re-probed on a stacked slab
+  (``probes.probe_batch_unroll``). Sharded plans fuse too — for EVERY
+  ordering — by riding a query axis inside the sharded blocks
+  (``runner.batched_block``); they require one shared table. Queries
+  with an early-stop rule (``tolerance``/``target_loss``), an MRS plan,
+  or a stored-table source keep per-query control flow and fall back to
+  singleton ``Engine.run``.
 
 * **Persistent plan cache** (``PlanStore``): the planner's artifacts —
   chosen plan, full EXPLAIN report, micro-probe calibration — persisted
@@ -54,19 +61,23 @@ import hashlib
 import json
 import os
 import time
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import ordering as ordering_lib, uda as uda_lib
-from repro.engine import executor, planner as planner_lib, probes
+from repro.engine import executor, planner as planner_lib
+from repro.engine import probes, program as program_lib
+from repro.engine import table as table_lib
+from repro.engine.program import vseed as _vseed, vsplit as _vsplit
 from repro.engine.query import AnalyticsQuery
 
 # Bump when the on-disk entry layout (or anything the planner persists)
 # changes shape: version-mismatched entries are ignored and rewritten.
 # v2: Plan grew the parallelism axis; Calibration grew the mesh-probed
 # segmented/sharded cost tables (repro.engine.shard).
+# (The EpochProgram refactor added Plan.source and PlanReport.axes with
+# backward-compatible defaults — v2 entries still load.)
 FORMAT_VERSION = 2
 
 REJECT_QUEUE_FULL = "queue_full"
@@ -159,8 +170,9 @@ class ServeConfig:
     max_batch: int = 8  # queries fused into one vmapped epoch call
     cache_dir: Optional[str] = None  # persistent plan cache root
     # bound on retained fused executables: each entry holds compiled XLA
-    # code per (query key, plan, batch size, epochs), so a long-running
-    # server seeing many burst sizes must not accumulate them unboundedly
+    # code per (query key, plan, batch size, epoch bound), so a long-
+    # running server seeing many burst sizes must not accumulate them
+    # unboundedly
     max_compiled_batches: int = 32
 
 
@@ -180,7 +192,7 @@ class Ticket:
     # a query that failed planning/execution completes with the error
     # recorded instead of killing the server loop (result stays None)
     error: Optional[str] = None
-    # pump() memoizes the fused-epoch key here so a ticket is planned at
+    # pump() memoizes the fused key here so a ticket is planned at
     # most once while queued (a >128-table queue would otherwise thrash
     # the engine's explain memo and replan per pump scan)
     batch_key_cache: Any = _UNSET
@@ -196,63 +208,8 @@ class Ticket:
 
 
 # ---------------------------------------------------------------------------
-# cross-query batching
+# the serving engine
 # ---------------------------------------------------------------------------
-
-
-def _vsplit(keys):
-    """Batched ``rng, sub = jax.random.split(rng)`` — bit-identical to
-    the per-query split (threefry is elementwise over keys)."""
-    out = jax.vmap(jax.random.split)(keys)
-    return out[:, 0], out[:, 1]
-
-
-# batched (PRNGKey(seed), fold_in(PRNGKey(seed), PERM_STREAM_SALT)) —
-# one dispatch for the whole batch's init rngs + ordering streams,
-# bit-identical to the executor's per-query derivation
-_vseed = jax.jit(jax.vmap(lambda s: (
-    jax.random.PRNGKey(s),
-    jax.random.fold_in(
-        jax.random.PRNGKey(s), executor.PERM_STREAM_SALT
-    ),
-)))
-
-# the same gather the ordering policies use (ordering._permute)
-_take = ordering_lib._permute
-
-
-def _permuted_lane(agg, unroll: int):
-    """One lane's serial fold that follows a permutation through the
-    table instead of folding a materialized shuffled copy
-    (``uda.gather_fold``) — the row gather rides inside the scan, so a
-    fused batch never writes B permuted copies of the table."""
-
-    def lane(state, data, perm):
-        return uda_lib.gather_fold(agg, state, data, perm, unroll=unroll)
-
-    return lane
-
-
-@dataclasses.dataclass
-class _BatchedPlan:
-    """Fused executables for one (fused-epoch key, batch size, epochs)."""
-
-    agg: Any
-    task: Any
-    plan: planner_lib.Plan
-    # "fused": run_fn receives the raw table(s) + unsplit rng keys and
-    # performs the ordering's shuffles (and their rng splits) on device;
-    # "fixed": the epoch stream is prepared once outside (prep_fn /
-    # stacking) and run_fn only consumes the per-epoch executor splits
-    mode: str
-    # (states, examples_or_data, keys) -> (states, keys): the ENTIRE
-    # multi-epoch run as one compiled call (scan over epochs around a
-    # vmap over queries) — zero per-epoch host dispatch
-    run_fn: Callable
-    prep_fn: Optional[Callable]  # fixed shuffle_once: one batched gather
-    loss_fn: Callable  # jit(vmap(full_loss))
-    init_fn: Callable  # jit(vmap(agg.initialize))
-    trace_counter: Dict[str, int]
 
 
 class ServingEngine:
@@ -282,12 +239,13 @@ class ServingEngine:
         self.config = config
         self._queue: collections.deque = collections.deque()
         self._queued_per_task: collections.Counter = collections.Counter()
-        self._batched: Dict[Tuple, _BatchedPlan] = {}
+        self._batched: Dict[Tuple, program_lib.CompiledProgram] = {}
         self.stats = {
             "accepted": 0,
             "rejected": 0,
             "batches": 0,
             "batched_queries": 0,
+            "masked_batches": 0,  # fused groups with heterogeneous epochs
             "singleton_queries": 0,
             "failed_queries": 0,
         }
@@ -315,18 +273,24 @@ class ServingEngine:
     # -- batching ---------------------------------------------------------
 
     def _batch_key(self, query: AnalyticsQuery) -> Optional[Tuple]:
-        """The fused-epoch key, or None when the query must run solo.
+        """The fused key, or None when the query must run solo.
 
-        Early-stop queries (tolerance / target_loss) need per-query epoch
-        counts; MRS plans carry per-query reservoirs. Both keep the
-        singleton path (which also serves them from the compiled-plan
-        cache)."""
+        Early-stop queries (tolerance / target_loss) need per-query stop
+        rules; MRS plans carry per-query reservoirs; stored tables are a
+        chunk stream, not a stackable pytree. All keep the singleton
+        path (which also serves them from the compiled-plan cache).
+        Note ``epochs`` is NOT part of the key: queries that differ only
+        in their epoch budget fuse via per-lane masks."""
         if query.target_loss is not None or query.tolerance:
             return None
+        if query.epochs < 1:
+            return None  # nothing to fuse; parity: no objective either
         if query.memory_budget_bytes is not None:
             # fusing stacks up to max_batch tables into one allocation —
             # B× the footprint the planner budgeted as feasible; honor
             # the budget by keeping budgeted queries singleton
+            return None
+        if table_lib.is_stored_table(query.data):
             return None
         try:
             plan = self.engine.explain(query).chosen
@@ -334,11 +298,7 @@ class ServingEngine:
             return None
         if plan.scheme == "mrs":
             return None
-        if plan.parallelism == "sharded" and plan.ordering != "clustered":
-            # fused sharded batches ride the clustered (pre-partitioned)
-            # stream; shuffle orderings keep per-query singleton runs
-            return None
-        return (query.cache_key_fields(), query.epochs, plan)
+        return (query.cache_key_fields(), plan)
 
     def _ticket_key(self, ticket: Ticket) -> Optional[Tuple]:
         if ticket.batch_key_cache is _UNSET:
@@ -364,8 +324,7 @@ class ServingEngine:
             for t in self._queue:
                 if len(matches) >= self.config.max_batch - 1:
                     break
-                q = t.query
-                if (q.cache_key_fields(), q.epochs) != (key[0], key[1]):
+                if t.query.cache_key_fields() != key[0]:
                     continue
                 if self._ticket_key(t) == key:
                     matches.append(t)
@@ -381,9 +340,11 @@ class ServingEngine:
                 head.result = self.engine.run(head.query)
                 head.done_s = time.perf_counter()
                 self.stats["singleton_queries"] += 1
-            elif self._run_batch(group, key[2]):
+            elif self._run_batch(group, key[1]):
                 self.stats["batches"] += 1
                 self.stats["batched_queries"] += len(group)
+                if len({t.query.epochs for t in group}) > 1:
+                    self.stats["masked_batches"] += 1
             else:
                 # the group declined fusion at run time (sharded plan
                 # over distinct tables): served singleton, still done
@@ -413,7 +374,7 @@ class ServingEngine:
 
     # -- batched execution ------------------------------------------------
 
-    def _batched_put(self, key: Tuple, compiled: "_BatchedPlan") -> None:
+    def _batched_put(self, key: Tuple, compiled) -> None:
         """Retain a fused executable, evicting FIFO past the bound (each
         entry holds compiled XLA code — a long-running server seeing many
         burst shapes must not accumulate them unboundedly)."""
@@ -427,210 +388,57 @@ class ServingEngine:
         plan: planner_lib.Plan,
         batch: int,
         shared_table: bool,
-    ) -> _BatchedPlan:
+        epochs: int,
+    ) -> program_lib.CompiledProgram:
+        """Compile (or fetch) the fused program for this group shape.
+        All construction lives in ``program.build_program``; this method
+        only re-probes the batched unroll and manages the bounded
+        cache."""
         key = (
-            query.cache_key_fields(), plan, batch, shared_table,
-            query.epochs,
+            query.cache_key_fields(), plan, batch, shared_table, epochs,
         )
         hit = self._batched.get(key)
         if hit is not None:
             return hit
         _, task, agg = self.engine._aggregate_for(query)
-        # The singleton plan's unroll was probed for a single fold; the
-        # vmapped executable has a very different overhead/compute balance
-        # (wider per-step ops want deeper unroll). Re-probe on a stacked
-        # slab — measured, not guessed, same as the planner's calibration.
-        plan = dataclasses.replace(
-            plan,
-            unroll=self._probe_batch_unroll(
-                query, agg, plan, batch, shared_table
+        if plan.parallelism != "sharded":
+            # the singleton plan's unroll was probed for a single fold;
+            # the vmapped executable wants its own (measured, not
+            # guessed — probes.probe_batch_unroll)
+            plan = dataclasses.replace(
+                plan,
+                unroll=probes.probe_batch_unroll(
+                    agg, query.data, query.n_examples, plan, batch,
+                    shared_table,
+                ),
+            )
+        compiled = program_lib.build_program(
+            task, agg,
+            program_lib.EpochProgram(
+                plan=plan, batch=batch, shared_table=shared_table,
+                epochs=epochs,
             ),
-        )
-        raw = executor.build_epoch_fn(task, agg, plan)
-        n = query.n_examples
-        epochs = query.epochs
-        ordering = plan.ordering
-        serial = plan.scheme == "serial"
-        data_axis = None if shared_table else 0
-        vperm = jax.vmap(lambda k: jax.random.permutation(k, n))
-
-        def epoch_scan(body, states, keys):
-            (states, keys), _ = jax.lax.scan(
-                body, (states, keys), None, length=epochs
-            )
-            return states, keys
-
-        prep_fn = None
-        if serial and ordering in ("shuffle_once", "shuffle_always"):
-            # serial fold through the permutation indices: the shuffle is
-            # a per-step row gather inside the scan — no lane ever
-            # materializes a permuted copy of the table. The rng splits
-            # (one for each ordering shuffle, one per executor epoch)
-            # replicate the singleton path exactly.
-            mode = "fused"
-            vlane = jax.vmap(
-                _permuted_lane(agg, plan.unroll),
-                in_axes=(0, data_axis, 0),
-            )
-            if ordering == "shuffle_once":
-
-                def run(states, data, keys):
-                    keys, psubs = _vsplit(keys)  # ShuffleOnce's one split
-                    perms = vperm(psubs)
-
-                    def body(carry, _):
-                        st, ks = carry
-                        ks, _ = _vsplit(ks)  # executor's per-epoch split
-                        return (vlane(st, data, perms), ks), None
-
-                    return epoch_scan(body, states, keys)
-
-            else:
-
-                def run(states, data, keys):
-                    def body(carry, _):
-                        st, ks = carry
-                        ks, psubs = _vsplit(ks)
-                        perms = vperm(psubs)
-                        ks, _ = _vsplit(ks)
-                        return (vlane(st, data, perms), ks), None
-
-                    return epoch_scan(body, states, keys)
-
-        elif ordering == "shuffle_always":
-            # non-serial schemes need materialized example arrays; the
-            # per-epoch reshuffle still lives inside the fused run
-            mode = "fused"
-            vtake = jax.vmap(_take, in_axes=(data_axis, 0))
-
-            def run(states, data, keys):
-                def body(carry, _):
-                    st, ks = carry
-                    ks, psubs = _vsplit(ks)
-                    ex = vtake(data, vperm(psubs))
-                    ks, subs = _vsplit(ks)
-                    return (jax.vmap(raw)(st, ex, subs), ks), None
-
-                return epoch_scan(body, states, keys)
-
-        else:
-            # fixed epoch stream: clustered (any scheme) streams the
-            # stored order; non-serial shuffle_once gathers once outside
-            mode = "fixed"
-            ex_axis = (
-                None if (shared_table and ordering == "clustered") else 0
-            )
-            vraw = jax.vmap(raw, in_axes=(0, ex_axis, 0))
-
-            def run(states, examples, keys):
-                def body(carry, _):
-                    st, ks = carry
-                    ks, subs = _vsplit(ks)
-                    return (vraw(st, examples, subs), ks), None
-
-                return epoch_scan(body, states, keys)
-
-            if ordering == "shuffle_once":
-                prep_fn = jax.jit(jax.vmap(
-                    lambda d, k: _take(d, jax.random.permutation(k, n)),
-                    in_axes=(data_axis, 0),
-                ))
-
-        counter = {"traces": 0}
-        # when every query in the batch reads the same table object, the
-        # objective evaluation broadcasts it instead of stacking B copies
-        loss_axes = (0, None) if shared_table else (0, 0)
-        compiled = _BatchedPlan(
-            agg=agg,
-            task=task,
-            plan=plan,
-            mode=mode,
-            run_fn=executor._counted_jit(run, counter, donate_argnums=(0,)),
-            prep_fn=prep_fn,
-            loss_fn=jax.jit(jax.vmap(task.full_loss, in_axes=loss_axes)),
-            init_fn=jax.jit(jax.vmap(agg.initialize)),
-            trace_counter=counter,
+            n_examples=query.n_examples,
         )
         self._batched_put(key, compiled)
         return compiled
 
-    def _probe_batch_unroll(
-        self,
-        query: AnalyticsQuery,
-        agg,
-        plan: planner_lib.Plan,
-        batch: int,
-        shared_table: bool,
-    ) -> int:
-        """Measure the batched fold's best scan unroll on a slab (once
-        per fused-epoch key; the executables are cached). Probes the same
-        variant that will run: the permuted lane for shuffle orderings,
-        the plain vmapped fold for the stored order."""
-        if plan.scheme != "serial":
-            return plan.unroll  # only the serial fold exposes the knob
-        cands = sorted({plan.unroll, 8, 16})
-        rows = min(query.n_examples, probes.PROBE_ROWS)
-        cands = [u for u in cands if u <= rows]
-        if len(cands) <= 1:
-            return plan.unroll
-        states = jax.vmap(agg.initialize)(
-            jnp.stack([jax.random.PRNGKey(i) for i in range(batch)])
-        )
-        permuted = plan.ordering in ("shuffle_once", "shuffle_always")
-        data_axis = None if shared_table else 0
-        if shared_table:
-            slab = jax.tree.map(lambda x: x[:rows], query.data)
-        else:
-            slab = jax.tree.map(
-                lambda x: jnp.stack([x[:rows]] * batch), query.data
-            )
-        # real (random) permutations: the run gathers rows in shuffled
-        # order, and an identity gather has a different memory-access
-        # cost that could mis-rank the unroll candidates
-        perms = (
-            jax.vmap(lambda k: jax.random.permutation(k, rows))(
-                jax.random.split(jax.random.PRNGKey(0), batch)
-            )
-            if permuted else None
-        )
-        best, best_t = plan.unroll, float("inf")
-        for u in cands:
-            # probe the exact variant the run will use: same lane, same
-            # broadcast-vs-stacked table axis
-            if permuted:
-                fold_u = jax.jit(jax.vmap(
-                    _permuted_lane(agg, u), in_axes=(0, data_axis, 0)
-                ))
-                args = (states, slab, perms)
-            else:
-                fold_u = jax.jit(jax.vmap(
-                    lambda s, ex, u=u: uda_lib.fold(agg, s, ex, unroll=u),
-                    in_axes=(0, data_axis),
-                ))
-                args = (states, slab)
-            # min-of-k, not median: serving probes run on a loaded box,
-            # and contention only ever inflates a sample
-            jax.block_until_ready(fold_u(*args))
-            t = float("inf")
-            for _ in range(5):
-                t0 = time.perf_counter()
-                jax.block_until_ready(fold_u(*args))
-                t = min(t, time.perf_counter() - t0)
-            if t < best_t:
-                best, best_t = u, t
-        return best
-
-    def _run_batch(self, tickets: List[Ticket], plan: planner_lib.Plan) -> bool:
+    def _run_batch(
+        self, tickets: List[Ticket], plan: planner_lib.Plan
+    ) -> bool:
         """Stack the group along a new query axis and execute the whole
         multi-epoch run as ONE compiled call. Per-query RNG streams and
         ordering semantics replicate the singleton executor bit-for-bit
         (vmapped threefry splits/permutations equal the per-query ones),
+        and per-lane epoch budgets freeze each lane at ITS epoch count —
         so a fused query returns the same model it would have gotten
         from ``Engine.run``. Returns False when the group fell back to
         singleton runs instead of fusing."""
         queries = [t.query for t in tickets]
         q0 = queries[0]
         b = len(queries)
+        epochs = max(q.epochs for q in queries)
+        budgets = jnp.asarray([q.epochs for q in queries], jnp.int32)
         ids0 = tuple(id(x) for x in jax.tree.leaves(q0.data))
         shared_table = all(
             tuple(id(x) for x in jax.tree.leaves(q.data)) == ids0
@@ -644,9 +452,9 @@ class ServingEngine:
                     t.result = self.engine.run(t.query)
                     t.done_s = time.perf_counter()
                 return False
-            self._run_batch_sharded(tickets, plan)
+            self._run_batch_sharded(tickets, plan, epochs, budgets)
             return True
-        compiled = self._batched_compile(q0, plan, b, shared_table)
+        compiled = self._batched_compile(q0, plan, b, shared_table, epochs)
         base, keys = _vseed(jnp.asarray([q.seed for q in queries]))
         states = compiled.init_fn(base)
 
@@ -672,7 +480,7 @@ class ServingEngine:
             )
         jax.block_until_ready(examples)
         t1 = time.perf_counter()
-        states, _ = compiled.run_fn(states, examples, keys)
+        states, _ = compiled.run_fn(states, examples, keys, budgets)
         jax.block_until_ready(states)
         shuffle_s = t1 - t0
         grad_s = time.perf_counter() - t1
@@ -688,18 +496,13 @@ class ServingEngine:
             )
         else:
             loss_src = examples  # already the raw stacked tables
-        # parity with the singleton executor: an epochs=0 run never
-        # evaluates the objective (Engine.run returns losses=[])
-        if q0.epochs:
-            losses = jax.device_get(compiled.loss_fn(models, loss_src))
-        else:
-            losses = None
+        losses = jax.device_get(compiled.loss_fn(models, loss_src))
         done = time.perf_counter()
         for i, t in enumerate(tickets):
             t.result = executor.EngineResult(
                 model=jax.tree.map(lambda x: x[i], models),
-                losses=[float(losses[i])] if losses is not None else [],
-                epochs=q0.epochs,
+                losses=[float(losses[i])],
+                epochs=t.query.epochs,
                 converged=False,
                 plan=compiled.plan,  # incl. the re-probed batch unroll
                 report=None,
@@ -712,71 +515,67 @@ class ServingEngine:
             t.done_s = done
         return True
 
-    def _run_batch_sharded(self, tickets: List[Ticket], plan):
+    def _run_batch_sharded(
+        self, tickets: List[Ticket], plan, epochs: int, budgets
+    ) -> None:
         """Fuse same-key queries over ONE shared table into the sharded
         subsystem: the per-shard local-SGD blocks gain a leading query
-        axis (``ShardedRunner.batched_block``), so B concurrent fits pay
-        one partitioned table and one executable per block length. Init
-        rngs are the batched threefry of the singleton path; the
-        clustered stream consumes no others — per-query results equal
-        ``Engine.run``'s (pinned by tests/test_shard.py)."""
-        from repro.dist import data_parallel as dp
+        axis with per-lane epoch budgets (``runner.batched_block``), for
+        EVERY ordering — B concurrent fits pay one table placement and
+        one executable per block length. Init rngs and per-lane perm
+        streams are the batched threefry of the singleton path, so
+        per-query results equal ``Engine.run``'s."""
+        from repro.engine import shard as shard_lib
 
         queries = [t.query for t in tickets]
         q0 = queries[0]
         b = len(queries)
         compiled = self.engine._compile(q0, plan)
-        runner = compiled.epoch_fn  # shard.ShardedRunner
+        runner = compiled.epoch_fn  # program.ShardedRunner
         n = q0.n_examples
-        mesh = runner.mesh
 
-        key = ("sharded", q0.cache_key_fields(), plan, b, q0.epochs)
+        key = ("sharded", q0.cache_key_fields(), plan, b, epochs)
         aux = self._batched.get(key)
         if aux is None:
-            aux = _BatchedPlan(
-                agg=runner.agg, task=compiled.task, plan=plan,
-                mode="sharded", run_fn=None, prep_fn=None,
-                loss_fn=jax.jit(
-                    jax.vmap(compiled.task.full_loss, in_axes=(0, None))
+            aux = program_lib.build_program(
+                compiled.task, runner.agg,
+                program_lib.EpochProgram(
+                    plan=plan, batch=b, shared_table=True, epochs=epochs,
                 ),
-                init_fn=jax.jit(jax.vmap(runner.agg.initialize)),
-                trace_counter=compiled.trace_counter,
+                n_examples=n,
             )
             self._batched_put(key, aux)
 
         t0 = time.perf_counter()
-        leaves = tuple(jax.tree.leaves(q0.data))
-        seg = runner.placed(
-            ("seg", tuple(id(x) for x in leaves)), leaves,
-            lambda: jax.device_put(
-                dp.partition_rows(q0.data, plan.num_shards),
-                dp.shard_sharding(mesh),
-            ),
+        base, pkeys = _vseed(jnp.asarray([q.seed for q in queries]))
+        mode, args, keys = shard_lib.place_batched_inputs(
+            runner, q0.data, n, pkeys
         )
-        base, _ = _vseed(jnp.asarray([q.seed for q in queries]))
         states = aux.init_fn(base)
-        jax.block_until_ready((seg, states))
+        jax.block_until_ready((args, states))
         t1 = time.perf_counter()
         done_epochs = 0
-        while done_epochs < q0.epochs:
-            block_len = min(plan.merge_period, q0.epochs - done_epochs)
-            states = runner.batched_block(block_len, n)(states, seg)
+        while done_epochs < epochs:
+            block_len = min(plan.merge_period, epochs - done_epochs)
+            fn = runner.batched_block(mode, block_len, n, b)
+            done_arr = jnp.int32(done_epochs)
+            if mode == "perm_epoch":
+                states, keys = fn(states, args[0], keys, budgets, done_arr)
+            else:
+                states = fn(states, *args, budgets, done_arr)
             done_epochs += block_len
         jax.block_until_ready(states)
         shuffle_s = t1 - t0
         grad_s = time.perf_counter() - t1
 
         models = jax.vmap(runner.agg.terminate)(states)
-        losses = (
-            jax.device_get(aux.loss_fn(models, q0.data))
-            if q0.epochs else None
-        )
+        losses = jax.device_get(aux.loss_fn(models, q0.data))
         done = time.perf_counter()
         for i, t in enumerate(tickets):
             t.result = executor.EngineResult(
                 model=jax.tree.map(lambda x: x[i], models),
-                losses=[float(losses[i])] if losses is not None else [],
-                epochs=q0.epochs,
+                losses=[float(losses[i])],
+                epochs=t.query.epochs,
                 converged=False,
                 plan=plan,
                 report=None,

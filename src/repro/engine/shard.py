@@ -1,157 +1,46 @@
-"""repro.engine.shard — multi-device sharded execution (the engine's
-third pillar, after planning and serving).
+"""repro.engine.shard — the sharded-parallelism driver.
 
-The paper's pure-UDA parallelization (§3.3/Fig. 9) — partition the
-table, train partial models, ``merge`` by weighted model averaging — is
-here a *real* execution subsystem rather than the statistical simulator
-in ``repro.core.parallel``: a ``sharded(k, H)`` plan partitions the
-table into ``k`` shared-nothing segments laid out over a device mesh
-(``XLA_FLAGS=--xla_force_host_platform_device_count`` splits the host
-CPU when no accelerators exist — see ``repro.launch.mesh``), and runs
-merge-period-``H`` local SGD: ``H`` epochs of independent per-shard
-serial folds compiled as ONE block (zero host round-trips, zero
-cross-device traffic), then one model-averaging merge — the only sync
-point, where the global model exists, losses are evaluated, and stop
-rules fire.
+The *construction* of the merge-period-H local-SGD blocks (and the
+step-size compensation that makes k=1 bit-identical to ``Engine.run``)
+lives in ``repro.engine.program`` — the one compiler all execution
+paths share; this module re-exports those pieces and keeps only what is
+genuinely a driver's job:
 
-Two decisions are *measured on the live mesh*, never modeled
-(``repro.engine.probes._probe_sharded``; Vertica's lesson that physical
-layout must be cost-based):
+* ``place_inputs`` / ``place_batched_inputs`` — lay the epoch stream
+  out on the mesh for each ordering (contiguous segments sharded;
+  permutation slices sharded over a replicated table; carried keys for
+  the in-run reshuffle), replicating the singleton executor's rng
+  derivation so k=1 (and every fused lane) stays bit-identical;
+* ``execute`` — the block loop: per-H-epoch compiled blocks, merged
+  model at every block boundary (where losses/stop rules are
+  evaluated), final merged model out. Mirrors ``executor._execute``'s
+  result contract.
 
-* the **placement** — how the ``k`` segments map onto devices (d devices
-  x k/d vmap lanes each). On a 2-core host, 2 devices beat 8; on a real
-  accelerator pod the full mesh wins. The probe picks; the plan records
-  it (``Plan.shard_devices``).
-* the **speedup** the planner uses to rank sharded against singleton
-  plans — ``engine.explain()`` reports it in the chosen plan's
-  ``why`` line.
-
-Step-size compensation: each shard's step counter advances once per
-*local* example (n/k per epoch), and averaging k lane displacements
-shrinks the effective step by ~k. ``compensated_step_size`` maps the
-registered schedule to ``alpha'(t) = k * alpha(k * t)`` — the linear
-scaling rule for model averaging: the averaged trajectory matches the
-serial schedule's in expectation (and beats it slightly, by gradient
-variance reduction — see BENCH_parallel.json), and ``k = 1`` is the
-identity, making the k=1 sharded path bit-identical to ``Engine.run``
-(pinned by tests/test_shard.py).
+Paper context (§3.3/Fig. 9): partition the table, train partial models,
+``merge`` by weighted model averaging — realized as a real multi-device
+subsystem; see ``program.build_shard_block`` for the block semantics
+and ENGINE.md for the measured-placement story.
 """
 
 from __future__ import annotations
 
-import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, List, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import convergence
 from repro.dist import data_parallel as dp
+from repro.engine import table as table_lib
 # no cycle: executor only imports this module lazily inside its functions
 from repro.engine import executor as executor_lib
-from repro.engine.executor import _counted_jit
-from repro.launch import mesh as mesh_lib
-
-
-def compensated_step_size(step_size: Callable, num_shards: int) -> Callable:
-    """The linear-scaling schedule for k-way model averaging (identity at
-    k=1, so the singleton path is untouched)."""
-    if num_shards == 1:
-        return step_size
-
-    def compensated(t):
-        return num_shards * step_size(num_shards * jnp.asarray(t))
-
-    return compensated
-
-
-def compensated_aggregate(agg, num_shards: int):
-    """The aggregate the shards fold with: same transition/merge, the
-    compensated schedule."""
-    if num_shards == 1:
-        return agg
-    return dataclasses.replace(
-        agg, step_size=compensated_step_size(agg.step_size, num_shards)
-    )
-
-
-class ShardedRunner:
-    """Compiled sharded-block executables for one (query key, plan).
-
-    Lives in the executor's compiled-plan cache as the plan's
-    ``epoch_fn``: repeat queries reuse the jitted blocks (the trace
-    counter stays flat — same observable as the singleton executor).
-    Blocks are keyed by length because the final block of a run may be
-    shorter (``epochs % H``)."""
-
-    def __init__(self, task, agg, plan, trace_counter: Dict[str, int]):
-        self.task = task
-        self.agg = agg  # the registered aggregate (merges, init, terminate)
-        self.agg_sharded = compensated_aggregate(agg, plan.num_shards)
-        self.plan = plan
-        self.trace_counter = trace_counter
-        self._blocks: Dict[Tuple, Callable] = {}
-        # repeat queries over the same live table skip re-partitioning /
-        # re-placing it on the mesh (leaf identity, like Engine._reports;
-        # entries pin their leaves so ids cannot be recycled)
-        self._placed: Dict[Tuple, Tuple] = {}
-
-    def placed(self, key: Tuple, leaves: Tuple, build: Callable):
-        hit = self._placed.get(key)
-        if hit is not None:
-            return hit[1]
-        value = build()
-        while len(self._placed) >= 8:
-            self._placed.pop(next(iter(self._placed)))
-        self._placed[key] = (leaves, value)
-        return value
-
-    @property
-    def mesh(self):
-        return mesh_lib.shard_mesh(self.plan.shard_devices)
-
-    def block(self, mode: str, block_len: int, n_rows: int) -> Callable:
-        key = (mode, block_len, n_rows)
-        fn = self._blocks.get(key)
-        if fn is None:
-            fn = _counted_jit(
-                dp.build_block_fn(
-                    self.agg_sharded, self.mesh,
-                    num_shards=self.plan.num_shards,
-                    block_len=block_len, mode=mode, n_rows=n_rows,
-                    unroll=self.plan.unroll,
-                ),
-                self.trace_counter,
-            )
-            self._blocks[key] = fn
-        return fn
-
-    def batched_block(self, block_len: int, n_rows: int) -> Callable:
-        """Fused-serving variant: a leading query axis over one shared
-        clustered table (``repro.engine.serve`` fans same-key queries
-        into it)."""
-        key = ("batched_segments", block_len, n_rows)
-        fn = self._blocks.get(key)
-        if fn is None:
-            fn = _counted_jit(
-                dp.build_block_fn(
-                    self.agg_sharded, self.mesh,
-                    num_shards=self.plan.num_shards,
-                    block_len=block_len, mode="segments", n_rows=n_rows,
-                    unroll=self.plan.unroll, batched=True,
-                ),
-                self.trace_counter,
-            )
-            self._blocks[key] = fn
-        return fn
-
-
-_MODES = {
-    "clustered": "segments",
-    "shuffle_once": "perm_once",
-    "shuffle_always": "perm_epoch",
-}
+from repro.engine import program as program_lib
+from repro.engine.program import (  # noqa: F401  (re-exported driver API)
+    SHARD_MODES as _MODES,
+    ShardedRunner,
+    compensated_aggregate,
+    compensated_step_size,
+)
 
 
 def place_inputs(
@@ -202,6 +91,52 @@ def place_inputs(
     return mode, args, key, perm_rng
 
 
+def place_batched_inputs(
+    runner: ShardedRunner, data, n: int, pkeys
+) -> Tuple[str, tuple, Optional[jax.Array]]:
+    """The fused-serving layout: B query lanes over ONE shared table.
+    ``pkeys[B]`` are the lanes' perm streams (``program.vseed``); each
+    lane consumes them exactly like its own singleton run would:
+
+    * clustered      — shared partitioned segments; no rng consumed;
+    * shuffle_once   — one vmapped split + permutation per lane,
+      per-shard slices [k, B, n/k] sharded, table replicated;
+    * shuffle_always — table replicated, per-lane keys carried into the
+      blocks (each in-block epoch performs both singleton splits,
+      vmapped over lanes).
+
+    Returns ``(mode, args, carried_keys)``; ``carried_keys`` is None
+    except for the in-run reshuffle."""
+    import jax.numpy as jnp
+
+    mesh = runner.mesh
+    k = runner.plan.num_shards
+    mode = _MODES[runner.plan.ordering]
+    leaves = tuple(jax.tree.leaves(data))
+    ids = tuple(id(x) for x in leaves)
+    if mode == "segments":
+        seg = runner.placed(
+            ("seg", ids), leaves,
+            lambda: jax.device_put(
+                dp.partition_rows(data, k), dp.shard_sharding(mesh)
+            ),
+        )
+        return mode, (seg,), None
+    table = runner.placed(
+        ("rep", ids), leaves,
+        lambda: jax.device_put(data, dp.replicated_sharding(mesh)),
+    )
+    if mode == "perm_once":
+        b = pkeys.shape[0]
+        _, subs = program_lib.vsplit(pkeys)  # each lane's ONE split
+        perms = jax.vmap(lambda key: jax.random.permutation(key, n))(subs)
+        # [B, n] -> [k, B, n/k]: shard-major so the slices ride P(AXIS)
+        perms = jnp.swapaxes(perms.reshape(b, k, n // k), 0, 1)
+        perms = jax.device_put(perms, dp.shard_sharding(mesh))
+        return mode, (table, perms), None
+    return mode, (table,), pkeys  # perm_epoch: keys carried in-block
+
+
 def execute(compiled, query, report) -> "Any":
     """Run a sharded plan: per-H-epoch compiled blocks, merged model at
     every block boundary (where losses/stop rules are evaluated), final
@@ -209,7 +144,9 @@ def execute(compiled, query, report) -> "Any":
     plan = compiled.plan
     runner: ShardedRunner = compiled.epoch_fn
     agg = runner.agg
-    data = query.data
+    # sharded layouts need random access: a stored Table materializes
+    # through the one resolve seam (Table.arrays() memoizes)
+    data = table_lib.resolve(query.data)
     n = query.n_examples
     if plan.num_shards < 1 or plan.merge_period < 1:
         raise ValueError(
@@ -220,8 +157,7 @@ def execute(compiled, query, report) -> "Any":
         raise ValueError(
             f"{n} rows not divisible into {plan.num_shards} shards"
         )
-    rng = jax.random.PRNGKey(query.seed)
-    perm_rng = jax.random.fold_in(rng, executor_lib.PERM_STREAM_SALT)
+    rng, perm_rng = program_lib.seed_streams(query.seed)
 
     if query.target_loss is not None:
         stop = lambda losses, epoch: bool(  # noqa: E731

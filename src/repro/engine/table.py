@@ -1,0 +1,194 @@
+"""The stored-table side of the EpochProgram data-source axis.
+
+An RDBMS table does not arrive as one device array: the storage layer
+hands the executor a *chunk stream* in stored order. This module defines
+the duck-typed ``Table`` protocol the engine consumes — the engine never
+imports a concrete storage class; anything with these members is a
+stored table:
+
+* ``is_stored_table`` — truthy marker (``getattr(obj, "is_stored_table",
+  False)`` is the one test every layer uses);
+* ``n_rows`` — total row count;
+* ``signature()`` — the shape/dtype signature of the *materialized*
+  pytree, byte-identical to ``AnalyticsQuery.data_signature()`` of the
+  same data held in memory, so stored and in-memory runs share one
+  compiled-plan cache and one calibration cache;
+* ``content_fingerprint(sample_rows)`` — same sampled content hash the
+  query computes for in-memory tables (persistent plan-cache keying);
+* ``chunks()`` — iterator of pytrees in stored order (the sequential
+  scan the executor streams);
+* ``arrays()`` — the whole table materialized as one pytree (the
+  fallback for plans that need random access: shuffle orderings,
+  segmented/sharded layouts, full-table loss evaluation);
+* ``probe_slab(rows)`` — the first ``rows`` rows materialized (planner
+  micro-probes and statistics).
+
+``ChunkedTable`` is the reference implementation: a fixed-chunk columnar
+layout held in host memory, standing in for an on-disk store. The point
+of the axis is the *access pattern* — the compiled epoch streams one
+chunk-sized working set at a time instead of requiring the whole table
+resident — which is exactly the paper's in-RDBMS constraint (§3.4
+motivates MRS the same way).
+"""
+
+from __future__ import annotations
+
+import hashlib
+from typing import Any, Iterator, List, Tuple
+
+import jax
+import numpy as np
+
+
+def is_stored_table(data: Any) -> bool:
+    return bool(getattr(data, "is_stored_table", False))
+
+
+def resolve(data: Any):
+    """The one materialization seam: a stored table becomes its pytree;
+    in-memory data passes through untouched."""
+    return data.arrays() if is_stored_table(data) else data
+
+
+def signature_of(data: Any) -> tuple:
+    """Shape/dtype signature of in-memory data (the layout both sides of
+    the duck-typed protocol must agree on)."""
+    struct = jax.tree.structure(data)
+    leaves = tuple(
+        (tuple(x.shape), str(x.dtype)) for x in jax.tree.leaves(data)
+    )
+    return (str(struct), leaves)
+
+
+def _sample_indices(n: int, sample_rows: int) -> np.ndarray:
+    """Boundary rows + evenly strided interior rows (sorted, unique) —
+    the one sampling rule every fingerprint implementation must share."""
+    edge = max(sample_rows // 6, 1)
+    return np.unique(np.concatenate([
+        np.arange(min(edge, n)),
+        np.linspace(0, n - 1, num=min(sample_rows, n)).astype(int),
+        np.arange(max(n - edge, 0), n),
+    ]))
+
+
+def fingerprint_arrays(signature: tuple, data: Any, sample_rows: int) -> str:
+    """Sampled content hash: signature + boundary rows + evenly strided
+    interior rows of every leaf (shared by ``AnalyticsQuery`` and stored
+    tables so both key the persistent plan cache identically)."""
+    h = hashlib.sha256(repr(signature).encode())
+    for leaf in jax.tree.leaves(data):
+        n = leaf.shape[0] if getattr(leaf, "ndim", 0) else 0
+        if n == 0:
+            continue
+        idx = _sample_indices(n, sample_rows)
+        x = np.asarray(jax.device_get(leaf[idx]))
+        h.update(x.tobytes())
+    return h.hexdigest()[:32]
+
+
+class ChunkedTable:
+    """Reference ``Table``: fixed-size row chunks in stored order.
+
+    Built from an in-memory pytree via ``from_arrays`` (the simulation of
+    an ingest). Chunk boundaries are invisible to the results: streaming
+    the chunks through the serial fold produces bit-identical floats to
+    folding the concatenated table — the transition sequence is the same,
+    only the working set differs.
+    """
+
+    is_stored_table = True
+
+    def __init__(self, chunks: List[Any]):
+        if not chunks:
+            raise ValueError("a ChunkedTable needs at least one chunk")
+        self._chunks = list(chunks)
+        self.n_rows = sum(
+            jax.tree.leaves(c)[0].shape[0] for c in self._chunks
+        )
+        self.chunk_rows = jax.tree.leaves(self._chunks[0])[0].shape[0]
+        self._arrays = None
+
+    @classmethod
+    def from_arrays(cls, data: Any, chunk_rows: int) -> "ChunkedTable":
+        n = jax.tree.leaves(data)[0].shape[0]
+        if chunk_rows < 1:
+            raise ValueError(f"chunk_rows must be >= 1, got {chunk_rows}")
+        chunks = [
+            jax.tree.map(lambda x: x[i:i + chunk_rows], data)
+            for i in range(0, n, chunk_rows)
+        ]
+        return cls(chunks)
+
+    # -- the Table protocol ----------------------------------------------
+
+    @property
+    def num_chunks(self) -> int:
+        return len(self._chunks)
+
+    def chunks(self) -> Iterator[Any]:
+        return iter(self._chunks)
+
+    def chunk_shapes(self) -> Tuple[int, ...]:
+        """Distinct chunk row counts (a ragged tail compiles one extra
+        executable; the trace counter makes that visible)."""
+        return tuple(sorted({
+            jax.tree.leaves(c)[0].shape[0] for c in self._chunks
+        }))
+
+    def arrays(self) -> Any:
+        if self._arrays is None:
+            self._arrays = jax.tree.map(
+                lambda *xs: jax.numpy.concatenate(xs, axis=0), *self._chunks
+            )
+        return self._arrays
+
+    def probe_slab(self, rows: int) -> Any:
+        rows = min(rows, self.n_rows)
+        have, parts = 0, []
+        for c in self._chunks:
+            if have >= rows:
+                break
+            take = min(rows - have, jax.tree.leaves(c)[0].shape[0])
+            parts.append(jax.tree.map(lambda x, t=take: x[:t], c))
+            have += take
+        if len(parts) == 1:
+            return parts[0]
+        return jax.tree.map(
+            lambda *xs: jax.numpy.concatenate(xs, axis=0), *parts
+        )
+
+    def signature(self) -> tuple:
+        struct = jax.tree.structure(self._chunks[0])
+        leaves = tuple(
+            ((self.n_rows,) + tuple(x.shape[1:]), str(x.dtype))
+            for x in jax.tree.leaves(self._chunks[0])
+        )
+        return (str(struct), leaves)
+
+    def data_bytes(self) -> int:
+        return sum(
+            x.size * x.dtype.itemsize
+            for c in self._chunks for x in jax.tree.leaves(c)
+        )
+
+    def content_fingerprint(self, sample_rows: int = 24) -> str:
+        """Byte-identical to ``fingerprint_arrays`` over the
+        materialized table, computed chunk-by-chunk: only the chunks
+        holding sampled rows are touched, and nothing is concatenated —
+        fingerprinting (the persistent plan cache's key) must not
+        materialize the table any more than planning does."""
+        h = hashlib.sha256(repr(self.signature()).encode())
+        idx = _sample_indices(self.n_rows, sample_rows)
+        leaves_per_chunk = [jax.tree.leaves(c) for c in self._chunks]
+        n_leaves = len(leaves_per_chunk[0])
+        for j in range(n_leaves):
+            offset = 0
+            for chunk_leaves in leaves_per_chunk:
+                leaf = chunk_leaves[j]
+                rows = leaf.shape[0]
+                local = idx[(idx >= offset) & (idx < offset + rows)] - offset
+                if local.size:
+                    x = np.asarray(jax.device_get(leaf[local]))
+                    h.update(x.tobytes())
+                offset += rows
+        return h.hexdigest()[:32]

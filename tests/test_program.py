@@ -1,0 +1,381 @@
+"""The EpochProgram composition matrix (repro.engine.program).
+
+Pins the IR's core guarantee: every composition collapses to the
+singleton executor's exact floats at k=1/B=1 (the reference below
+replays the pre-refactor singleton semantics — rng discipline, ordering
+policies, serial fold — independently of program.py), heterogeneous
+epoch budgets fuse via masked lanes and return each lane's own
+singleton result, the stored-table chunk stream is invisible to the
+floats, and the previously-impossible composition (sharded ×
+shuffle_always × heterogeneous-epoch batch) runs end-to-end.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.core import ordering as ordering_lib, uda as uda_lib
+from repro.data import synthetic
+from repro.engine import catalog, program as program_lib, serve
+
+RNG = jax.random.PRNGKey(0)
+
+ORDERINGS = ("clustered", "shuffle_once", "shuffle_always")
+
+
+def _q(data, seed=0, epochs=3, **kw):
+    kw.setdefault("tolerance", 0.0)
+    return engine.AnalyticsQuery(
+        task="logreg", data=data, task_args={"dim": 4}, seed=seed,
+        epochs=epochs, **kw
+    )
+
+
+def _agg(n):
+    spec = catalog.get("logreg")
+    task = spec.make_task(dim=4)
+    return task, uda_lib.IGDAggregate(
+        task, spec.step_size(n), prox=spec.prox(task)
+    )
+
+
+def _reference(data, seed, epochs, ordering, unroll=1):
+    """The pre-refactor singleton executor, replayed by hand: the pinned
+    rng discipline (PRNGKey(seed); fold_in PERM_STREAM_SALT; one
+    ordering split per shuffle; one executor split per epoch) around
+    ``uda.fold``. Independent of repro.engine.program — if the compiler
+    drifts, this does not drift with it."""
+    n = jax.tree.leaves(data)[0].shape[0]
+    _, agg = _agg(n)
+    policy = {
+        "clustered": ordering_lib.Clustered,
+        "shuffle_once": ordering_lib.ShuffleOnce,
+        "shuffle_always": ordering_lib.ShuffleAlways,
+    }[ordering]()
+    rng = jax.random.PRNGKey(seed)
+    perm_rng = jax.random.fold_in(rng, program_lib.PERM_STREAM_SALT)
+    state = agg.initialize(rng)
+    for epoch in range(1, epochs + 1):
+        examples, perm_rng = policy.order(data, n, epoch, perm_rng)
+        perm_rng, _ = jax.random.split(perm_rng)
+        state = uda_lib.fold(agg, state, examples, unroll=unroll)
+    return agg.terminate(state)
+
+
+# ---------------------------------------------------------------------------
+# the k=1 / B=1 collapse: every composition == the singleton executor
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("ordering", ORDERINGS)
+@pytest.mark.parametrize("parallelism", ["singleton", "sharded"])
+def test_matrix_k1_bit_identical_to_pinned_singleton(ordering, parallelism):
+    """(ordering × parallelism) at k=1 must reproduce the hand-replayed
+    singleton floats exactly — same rng streams, same fold, byte-equal
+    models."""
+    data = synthetic.dense_classification(RNG, 96, 4)
+    q = _q(data, seed=7)
+    ref = _reference(data, 7, q.epochs, ordering)
+    plan = engine.Plan(
+        ordering, "serial", unroll=1,
+        parallelism=parallelism,
+        num_shards=1, merge_period=1, shard_devices=1,
+    )
+    res = engine.Engine().run(q, plan=plan)
+    assert np.array_equal(np.asarray(res.model), np.asarray(ref)), (
+        ordering, parallelism,
+    )
+
+
+@pytest.mark.parametrize("ordering", ORDERINGS)
+def test_matrix_b1_fused_lane_matches_singleton(ordering):
+    """The batching axis at B=1: one fused lane (with its budget mask)
+    must return the singleton result. Exercises build_program's fused
+    path directly — serve never fuses a group of one."""
+    data = synthetic.dense_classification(RNG, 96, 4)
+    epochs = 3
+    ref = _reference(data, 5, epochs, ordering, unroll=1)
+    task, agg = _agg(96)
+    plan = engine.Plan(ordering, "serial", unroll=1)
+    compiled = program_lib.build_program(
+        task, agg,
+        program_lib.EpochProgram(
+            plan=plan, batch=1, shared_table=True, epochs=epochs,
+        ),
+        n_examples=96,
+    )
+    base, keys = program_lib.vseed(jnp.asarray([5]))
+    states = compiled.init_fn(base)
+    budgets = jnp.asarray([epochs], jnp.int32)
+    if compiled.mode == "fixed" and ordering == "shuffle_once":
+        keys, subs = program_lib.vsplit(keys)
+        examples = compiled.prep_fn(data, subs)
+    else:
+        examples = data
+    states, _ = compiled.run_fn(states, examples, keys, budgets)
+    model = jax.tree.map(lambda x: x[0], jax.vmap(agg.terminate)(states))
+    np.testing.assert_allclose(
+        np.asarray(model), np.asarray(ref), rtol=1e-6, atol=1e-8
+    )
+
+
+def test_fused_homogeneous_budgets_bit_match_unmasked_semantics():
+    """All-equal budgets select the new state at every epoch: the masked
+    run is the homogeneous fused run, not merely close to it. Pinned by
+    running the same fused program at budgets=[E,E] and comparing lanes
+    against the B=1 singleton Engine."""
+    data = synthetic.dense_classification(RNG, 96, 4)
+    hints = {"ordering": "shuffle_always", "scheme": "serial"}
+    eng = engine.Engine()
+    serial = [eng.run(_q(data, seed=s, hints=hints)) for s in (0, 1)]
+    srv = serve.ServingEngine(serve.ServeConfig(max_batch=4))
+    tickets = [srv.submit(_q(data, seed=s, hints=hints)) for s in (0, 1)]
+    srv.drain()
+    assert srv.stats["batches"] == 1
+    assert srv.stats["masked_batches"] == 0
+    for t, ref in zip(tickets, serial):
+        np.testing.assert_allclose(
+            np.asarray(t.result.model), np.asarray(ref.model),
+            rtol=1e-5, atol=1e-7,
+        )
+
+
+# ---------------------------------------------------------------------------
+# masked-lane fusion (heterogeneous epoch budgets)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("hints", [
+    {"ordering": "shuffle_once", "scheme": "serial"},
+    {"ordering": "shuffle_always", "scheme": "serial"},
+    {"ordering": "clustered", "scheme": "serial"},
+    {"ordering": "shuffle_once", "scheme": "segmented", "num_segments": 4},
+])
+def test_masked_fusion_matches_singleton_per_lane(hints):
+    """Queries that differ only in epochs fuse into ONE batch; each lane
+    freezes at its own budget and returns its own singleton model and
+    loss."""
+    data = synthetic.dense_classification(RNG, 96, 4)
+    budgets = (1, 3, 2)
+    eng = engine.Engine()
+    serial = [
+        eng.run(_q(data, seed=s, epochs=e, hints=hints))
+        for s, e in enumerate(budgets)
+    ]
+    srv = serve.ServingEngine(serve.ServeConfig(max_batch=4))
+    tickets = [
+        srv.submit(_q(data, seed=s, epochs=e, hints=hints))
+        for s, e in enumerate(budgets)
+    ]
+    srv.drain()
+    assert srv.stats["batches"] == 1, hints
+    assert srv.stats["masked_batches"] == 1
+    for t, ref in zip(tickets, serial):
+        assert t.error is None, (hints, t.error)
+        assert t.result.epochs == ref.epochs
+        np.testing.assert_allclose(
+            np.asarray(t.result.model), np.asarray(ref.model),
+            rtol=1e-5, atol=1e-7, err_msg=str(hints),
+        )
+        np.testing.assert_allclose(
+            t.result.losses[-1], ref.losses[-1], rtol=1e-5
+        )
+
+
+@pytest.mark.parametrize("ordering", ORDERINGS)
+def test_sharded_fused_heterogeneous_epochs_all_orderings(ordering):
+    """The previously-impossible composition: sharded parallelism ×
+    (any ordering, incl. shuffle_always) × heterogeneous-epoch batch,
+    end-to-end through the serving front-end, each lane equal to its
+    singleton sharded run."""
+    data = synthetic.dense_classification(RNG, 96, 4)
+    hints = {"parallelism": "sharded", "num_shards": 2, "merge_period": 2,
+             "ordering": ordering}
+    budgets = (2, 4, 3)
+    eng = engine.Engine()
+    serial = [
+        eng.run(_q(data, seed=s, epochs=e, hints=hints))
+        for s, e in enumerate(budgets)
+    ]
+    assert serial[0].plan.parallelism == "sharded"
+    srv = serve.ServingEngine(serve.ServeConfig(max_batch=4))
+    tickets = [
+        srv.submit(_q(data, seed=s, epochs=e, hints=hints))
+        for s, e in enumerate(budgets)
+    ]
+    srv.drain()
+    assert srv.stats["batches"] == 1, ordering
+    assert srv.stats["masked_batches"] == 1
+    for t, ref in zip(tickets, serial):
+        assert t.error is None, (ordering, t.error)
+        assert t.result.batch_size == 3
+        np.testing.assert_allclose(
+            np.asarray(t.result.model), np.asarray(ref.model),
+            rtol=1e-5, atol=1e-7, err_msg=ordering,
+        )
+        np.testing.assert_allclose(
+            t.result.losses[-1], ref.losses[-1], rtol=1e-5
+        )
+
+
+# ---------------------------------------------------------------------------
+# the data-source axis (stored-table chunk stream)
+# ---------------------------------------------------------------------------
+
+
+def test_chunk_stream_bit_identical_to_in_memory():
+    """Chunk boundaries are invisible: streaming the stored order equals
+    folding the resident table byte-for-byte (same transition sequence),
+    and the planner picks source='table' for the streamable plan."""
+    data = synthetic.dense_classification(RNG, 96, 4, clustered=False)
+    tab = engine.ChunkedTable.from_arrays(data, 32)
+    eng = engine.Engine()
+    rep = eng.explain(_q(tab))
+    assert rep.chosen.source == "table"
+    res = eng.run(_q(tab))
+    ref = eng.run(_q(data), plan=engine.Plan(
+        "clustered", "serial", unroll=res.plan.unroll
+    ))
+    assert np.array_equal(np.asarray(res.model), np.asarray(ref.model))
+    assert res.losses == ref.losses
+
+
+def test_table_materializes_for_shuffle_plans():
+    """Random-access plans over a stored table resolve through
+    Table.arrays() and match the in-memory run exactly (same rng
+    streams, same materialized rows)."""
+    data = synthetic.dense_classification(RNG, 96, 4)
+    tab = engine.ChunkedTable.from_arrays(data, 32)
+    hints = {"ordering": "shuffle_once", "scheme": "serial"}
+    eng = engine.Engine()
+    r1 = eng.run(_q(tab, hints=hints))
+    r2 = eng.run(_q(data, hints=hints))
+    assert r1.plan.source == "memory"
+    assert np.array_equal(np.asarray(r1.model), np.asarray(r2.model))
+
+
+def test_table_shares_signature_and_plan_caches():
+    """Table.signature()/fingerprint equal the in-memory query's, so
+    stored and resident runs share calibration + plan-store entries."""
+    data = synthetic.dense_classification(RNG, 96, 4)
+    tab = engine.ChunkedTable.from_arrays(data, 32)
+    qt, qm = _q(tab), _q(data)
+    assert qt.data_signature() == qm.data_signature()
+    assert qt.content_fingerprint() == qm.content_fingerprint()
+    assert qt.cache_key_fields() == qm.cache_key_fields()
+    assert qt.n_examples == qm.n_examples
+    assert qt.data_bytes == qm.data_bytes
+
+
+def test_sharded_plan_on_stored_table_materializes_and_runs():
+    """A sharded plan over a stored table resolves through
+    Table.arrays() before partitioning (regression: the sharded branch
+    used to receive the raw Table object)."""
+    data = synthetic.dense_classification(RNG, 96, 4)
+    tab = engine.ChunkedTable.from_arrays(data, 32)
+    hints = {"parallelism": "sharded", "num_shards": 2, "merge_period": 1,
+             "ordering": "clustered"}
+    eng = engine.Engine()
+    res = eng.run(_q(tab, hints=hints))
+    ref = eng.run(_q(data, hints=hints))
+    assert res.plan.parallelism == "sharded"
+    assert np.array_equal(np.asarray(res.model), np.asarray(ref.model))
+
+
+def test_fingerprint_does_not_materialize_the_table():
+    """The persistent plan cache's fingerprint samples chunks in place —
+    it must not trigger (or memoize) a full materialization."""
+    data = synthetic.dense_classification(RNG, 96, 4)
+    tab = engine.ChunkedTable.from_arrays(data, 32)
+    tab.content_fingerprint()
+    assert tab._arrays is None
+
+
+def test_sequential_ordering_alias_and_source_hints():
+    data = synthetic.dense_classification(RNG, 96, 4, clustered=False)
+    tab = engine.ChunkedTable.from_arrays(data, 32)
+    eng = engine.Engine()
+    rep = eng.explain(_q(tab, hints={"ordering": "sequential"}))
+    assert rep.chosen.ordering == "clustered"
+    assert rep.chosen.source == "table"
+    rep2 = eng.explain(_q(tab, hints={"source": "table"}))
+    assert rep2.chosen.source == "table"
+    with pytest.raises(ValueError, match="stored Table"):
+        eng.explain(_q(data, hints={"source": "table"}))
+    with pytest.raises(ValueError, match="streaming plan"):
+        eng.explain(_q(tab, hints={"source": "table",
+                                   "ordering": "shuffle_always"}))
+
+
+def test_ragged_tail_chunk_still_matches():
+    """A table whose last chunk is shorter compiles one extra executable
+    but produces the same floats."""
+    data = synthetic.dense_classification(RNG, 80, 4)  # 80 = 2*32 + 16
+    tab = engine.ChunkedTable.from_arrays(data, 32)
+    assert tab.chunk_shapes() == (16, 32)
+    eng = engine.Engine()
+    res = eng.run(_q(tab, hints={"source": "table"}))
+    ref = eng.run(_q(data), plan=engine.Plan(
+        "clustered", "serial", unroll=res.plan.unroll
+    ))
+    assert np.array_equal(np.asarray(res.model), np.asarray(ref.model))
+    assert res.trace_count == 2  # one executable per chunk shape
+
+
+# ---------------------------------------------------------------------------
+# EXPLAIN: the why line names the composed axes
+# ---------------------------------------------------------------------------
+
+
+def test_explain_why_line_names_all_axes():
+    data = synthetic.dense_classification(RNG, 96, 4)
+    rep = engine.Engine().explain(_q(data))
+    why = next(
+        ln for ln in rep.describe().splitlines() if ln.startswith("why")
+    )
+    for token in ("axes:", "ordering=", "parallelism=", "batch=", "source="):
+        assert token in why, (token, why)
+    # fixed-epoch unbudgeted query on a resident table: fusable
+    assert "batch=fusable" in why
+
+
+def test_explain_axes_survive_plan_store_roundtrip(tmp_path):
+    data = synthetic.dense_classification(RNG, 128, 4)
+    q = _q(data)
+    e1 = engine.Engine(plan_store=serve.PlanStore(str(tmp_path)))
+    rep1 = e1.explain(q)
+    e2 = engine.Engine(plan_store=serve.PlanStore(str(tmp_path)))
+    rep2 = e2.explain(q)
+    assert rep2.axes == rep1.axes and rep1.axes
+    assert rep2.describe() == rep1.describe()
+
+
+# ---------------------------------------------------------------------------
+# shared compile counter
+# ---------------------------------------------------------------------------
+
+
+def test_standalone_drivers_count_in_global_tally():
+    """run_mrs / run_shared_memory route their private jits through the
+    shared counter, so their retraces are observable like every engine
+    path's."""
+    from repro.core import igd, mrs as mrs_lib, parallel, tracecount
+    from repro import tasks
+
+    data = synthetic.dense_classification(RNG, 64, 4)
+    task = tasks.LogisticRegression(dim=4)
+    agg = uda_lib.IGDAggregate(task, igd.diminishing(0.1, decay=64))
+    before = tracecount.global_traces()
+    mrs_lib.run_mrs(
+        agg, data, rng=RNG, epochs=1,
+        cfg=mrs_lib.MRSConfig(buffer_size=8),
+    )
+    assert tracecount.global_traces() > before
+    before = tracecount.global_traces()
+    parallel.run_shared_memory(
+        task, igd.diminishing(0.1, decay=64), data, rng=RNG, epochs=1,
+        cfg=parallel.SharedMemoryConfig(workers=2),
+    )
+    assert tracecount.global_traces() > before

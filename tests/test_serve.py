@@ -156,12 +156,48 @@ def test_early_stop_queries_run_singleton():
     assert t1.result.batch_size == 1 and t2.result.batch_size == 1
 
 
+def test_heterogeneous_epochs_fuse_via_masked_lanes():
+    """Queries differing ONLY in their epoch budget fuse into one
+    masked-lane batch, and each lane returns exactly its own singleton
+    result (the lane freezes once its budget is spent)."""
+    data = synthetic.dense_classification(RNG, 96, 4)
+    hints = {"ordering": "shuffle_once", "scheme": "serial"}
+    budgets = (1, 3, 2)
+    eng = engine.Engine()
+    serial = [
+        eng.run(_q(data, seed=s, epochs=e, hints=hints))
+        for s, e in enumerate(budgets)
+    ]
+    srv = serve.ServingEngine(serve.ServeConfig(max_batch=4))
+    tickets = [
+        srv.submit(_q(data, seed=s, epochs=e, hints=hints))
+        for s, e in enumerate(budgets)
+    ]
+    srv.drain()
+    assert srv.stats["batches"] == 1
+    assert srv.stats["masked_batches"] == 1
+    for t, ref in zip(tickets, serial):
+        assert t.error is None
+        assert t.result.epochs == ref.epochs
+        np.testing.assert_allclose(
+            np.asarray(t.result.model), np.asarray(ref.model),
+            rtol=1e-5, atol=1e-7,
+        )
+        np.testing.assert_allclose(
+            t.result.losses[-1], ref.losses[-1], rtol=1e-5
+        )
+
+
 def test_incompatible_queries_are_not_fused():
-    """Different epoch budgets -> different fused-epoch keys."""
+    """Different task_args -> different cache key fields -> no fusion
+    (epoch budgets no longer separate keys — masked lanes fuse them)."""
     data = synthetic.dense_classification(RNG, 96, 4)
     srv = serve.ServingEngine(serve.ServeConfig(max_batch=4))
-    srv.submit(_q(data, seed=0, epochs=1))
-    srv.submit(_q(data, seed=1, epochs=2))
+    srv.submit(_q(data, seed=0))
+    srv.submit(engine.AnalyticsQuery(
+        task="logreg", data=data, task_args={"dim": 4, "mu": 1e-3},
+        seed=1, epochs=2, tolerance=0.0,
+    ))
     srv.drain()
     assert srv.stats["batches"] == 0
     assert srv.stats["singleton_queries"] == 2
