@@ -13,9 +13,13 @@ import time
 import jax
 
 from benchmarks.common import row
-from repro import engine
+from repro import engine, obs
 from repro.core import ordering
 from repro.data import synthetic
+
+# The obs layer's contract: with tracing disabled, instrumentation may
+# not cost more than this fraction of the cache-warm query wall.
+OBS_OVERHEAD_BUDGET = 0.02
 
 RNG = jax.random.PRNGKey(7)
 
@@ -44,6 +48,31 @@ def run(quick: bool = True):
     retraced = res_warm.trace_count != res_cold.trace_count
     rows.append(row("engine_query_warm", t_warm,
                     f"cache_hit={hit};retraced={retraced}"))
+
+    # obs overhead guard: (spans a warm run emits) x (measured cost of a
+    # disabled span) must stay under OBS_OVERHEAD_BUDGET of the warm
+    # wall. Modeled, not diffed run-to-run: the added cost (~1us) is
+    # orders of magnitude below the warm wall's own jitter, so a
+    # wall-vs-wall comparison could never detect a broken no-op path —
+    # counting the spans and pricing them can.
+    with obs.tracing() as rec:
+        eng.run(q)
+    n_spans = len(rec)
+    span_cost = obs.trace.disabled_span_cost()
+    added = n_spans * span_cost
+    frac = added / t_warm
+    if frac > OBS_OVERHEAD_BUDGET:
+        raise RuntimeError(
+            f"tracing-off overhead {added * 1e6:.1f}us is "
+            f"{frac:.1%} of the warm wall ({t_warm * 1e3:.1f}ms) — "
+            f"over the {OBS_OVERHEAD_BUDGET:.0%} budget; the disabled "
+            f"span path is no longer a no-op"
+        )
+    rows.append(row(
+        "engine_obs_overhead", added,
+        f"spans={n_spans};ns_per_span={span_cost * 1e9:.0f};"
+        f"warm_frac={frac:.2e};budget={OBS_OVERHEAD_BUDGET}",
+    ))
 
     # planner vs forced-clustered on the CA-TX pathology
     catx = ordering.make_catx_dataset(n // 2)

@@ -27,6 +27,34 @@ import traceback
 REGRESSION_THRESHOLD = 0.30
 _MIN_COMPARABLE_US = 5000.0
 
+# Whole-suite wall gate: coarser than the per-row gate (walls include
+# compile time and harness overhead, so they jitter more), it exists to
+# catch a suite quietly doubling — e.g. a cache that stopped hitting
+# across rows. Floored at 10s so short suites never trip on noise.
+WALL_REGRESSION_FACTOR = 2.0
+_MIN_COMPARABLE_WALL_S = 10.0
+
+
+def _suite_metrics(suite: str, wall_s: float) -> dict:
+    """Stamp the suite's wall and the process peak RSS through the obs
+    registry (the harness is a metrics *source* like any subsystem), and
+    return what goes into the BENCH json record."""
+    import resource
+
+    from repro import obs
+
+    obs.metrics.gauge(
+        "bench.peak_rss_bytes",
+        # ru_maxrss is KB on Linux
+        fn=lambda: resource.getrusage(resource.RUSAGE_SELF).ru_maxrss * 1024,
+    )
+    obs.metrics.set_gauge(f"bench.{suite}.wall_s", wall_s)
+    snap = obs.metrics.snapshot("bench.")
+    return {
+        "wall_seconds": round(snap[f"bench.{suite}.wall_s"]["value"], 3),
+        "peak_rss_bytes": snap["bench.peak_rss_bytes"]["value"],
+    }
+
 
 def _accept_baseline() -> bool:
     """True when the operator asked to replace baselines on purpose
@@ -62,7 +90,7 @@ def _baseline_record(path: str):
         return json.load(f)
 
 
-def _diff_baseline(path: str, rows: list) -> list:
+def _diff_baseline(path: str, rows: list, wall_s: float = 0.0) -> list:
     """Regression lines vs the committed BENCH json at ``path`` (if any)."""
     try:
         record = _baseline_record(path)
@@ -70,6 +98,13 @@ def _diff_baseline(path: str, rows: list) -> list:
     except (OSError, ValueError, KeyError):
         return []
     out = []
+    base_wall = record.get("wall_seconds", 0.0)
+    wall_floor = max(base_wall, _MIN_COMPARABLE_WALL_S)
+    if wall_s > wall_floor * WALL_REGRESSION_FACTOR:
+        out.append(
+            f"{record.get('suite', path)}: suite wall {wall_s:.1f}s vs "
+            f"baseline {base_wall:.1f}s (>{WALL_REGRESSION_FACTOR:.1f}x)"
+        )
     for r in rows:
         base = old.get(r["name"])
         if base is None:
@@ -155,11 +190,12 @@ def main() -> None:
             traceback.print_exc(file=sys.stderr)
         if args.json is not None:
             rows = [_parse_row(x) for x in lines]
+            wall_s = time.time() - t0
             record = {
                 "suite": name,
                 "quick": quick,
-                "wall_seconds": round(time.time() - t0, 3),
                 "rows": rows,
+                **_suite_metrics(name, wall_s),
             }
             if err:
                 record["error"] = err
@@ -167,7 +203,10 @@ def main() -> None:
             # overwrite (or be diffed against) the quick-mode baselines
             suffix = "" if quick else "_full"
             path = os.path.join(args.json, f"BENCH_{name}{suffix}.json")
-            suite_reg = _diff_baseline(path, rows) if (not err and quick) else []
+            suite_reg = (
+                _diff_baseline(path, rows, wall_s)
+                if (not err and quick) else []
+            )
             regressions += suite_reg
             # a regressed or errored run must NOT replace the committed
             # baseline (the failure would be one-shot: a re-run would diff

@@ -26,6 +26,8 @@ if [[ "${1:-}" != "--fast" ]]; then
     python -m benchmarks.run --only parallel --json .
   echo "== composed-program smoke (4-device mesh x shuffle_always x B=4) =="
   python scripts/composed_smoke.py
+  echo "== obs smoke (traced query + JSONL schema + EXPLAIN ANALYZE) =="
+  python scripts/obs_smoke.py
 fi
 
 echo "CHECK OK"

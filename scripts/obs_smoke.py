@@ -1,0 +1,76 @@
+"""Observability smoke for scripts/check.sh: run one query traced and
+one untraced, validate the exported JSONL trace against the fixed span
+schema, check the Chrome-trace export, EXPLAIN ANALYZE's per-axis
+table, the serving metrics surface, and pin the disabled path to zero
+recorded spans."""
+
+import json
+import os
+import tempfile
+
+import jax
+
+from repro import engine, obs
+from repro.data import synthetic
+from repro.engine import serve
+from repro.obs import trace
+
+data = synthetic.dense_classification(jax.random.PRNGKey(0), 512, 8)
+
+
+def q(seed=0, epochs=3):
+    return engine.AnalyticsQuery(
+        task="logreg", data=data, task_args={"dim": 8}, seed=seed,
+        epochs=epochs, tolerance=0.0,
+    )
+
+
+eng = engine.Engine()
+
+# -- traced run: export + schema validation ---------------------------------
+with obs.tracing() as rec:
+    eng.run(q())
+names = {s["name"] for s in rec.spans}
+for expected in ("engine.run", "engine.compile", "epoch"):
+    assert expected in names, (expected, names)
+with tempfile.TemporaryDirectory() as tmp:
+    jsonl = os.path.join(tmp, "trace.jsonl")
+    chrome = os.path.join(tmp, "trace.json")
+    n = rec.export_jsonl(jsonl)
+    assert trace.validate_jsonl(jsonl) == n > 0
+    assert rec.export_chrome_trace(chrome) == n
+    with open(chrome) as f:
+        assert len(json.load(f)["traceEvents"]) == n
+print(f"traced query: {n} spans, JSONL schema valid")
+
+# -- disabled path: zero spans recorded -------------------------------------
+before = len(rec)
+assert not obs.enabled()
+eng.run(q(seed=1))
+assert len(rec) == before, "disabled tracer recorded spans"
+print("disabled path: zero spans recorded")
+
+# -- EXPLAIN ANALYZE: per-axis predicted vs measured ------------------------
+rep = eng.explain_analyze(q(seed=2, epochs=4))
+assert [r.axis for r in rep.rows] == [
+    "ordering", "parallelism", "batching", "source",
+]
+assert rep.epochs_run == 4 and rep.measured_total_s > 0
+print(rep.describe())
+
+# -- serving metrics surface ------------------------------------------------
+srv = serve.ServingEngine(serve.ServeConfig(max_batch=4), engine=eng)
+tickets = [srv.submit(q(seed=s)) for s in range(3)]
+srv.drain()
+assert all(t.done for t in tickets)
+m = srv.metrics()
+assert m["accepted"] == 3 and m["shed_queue_full"] == 0
+assert m["obs"]["serve.accepted"]["value"] == 3
+lat = m["obs"]["serve.latency_s.logreg"]
+assert lat["count"] == 3 and lat["p99"] >= lat["p50"] > 0
+print(
+    f"serve metrics: accepted={m['accepted']} "
+    f"latency p50={lat['p50'] * 1e3:.2f}ms p99={lat['p99'] * 1e3:.2f}ms"
+)
+
+print("OBS SMOKE OK")

@@ -9,6 +9,13 @@ audit. ``EngineResult.trace_count`` (and the cache tests that pin it to
 zero on repeat queries) read per-executable counters; ``GLOBAL`` sums
 every retrace in the process, including the paths that predate the
 engine (``run_mrs``, ``run_shared_memory``).
+
+The tally is also a metric source: ``repro.obs`` registers a callback
+gauge (``core.retraces``) reading ``global_traces``, so the obs
+registry exposes recompiles next to latencies. (This module must not
+import ``repro.obs`` — obs imports it.) ``snapshot``/``restore`` exist
+for test isolation: the process-wide count must not leak between tests
+(the autouse fixture in ``tests/conftest.py``).
 """
 
 from __future__ import annotations
@@ -42,3 +49,14 @@ def counted_jit(fn, counter: Optional[Dict[str, int]] = None, **jit_kw):
 
 def global_traces() -> int:
     return GLOBAL["traces"]
+
+
+def snapshot() -> int:
+    """The current process-wide tally (pair with :func:`restore`)."""
+    return GLOBAL["traces"]
+
+
+def restore(value: int) -> None:
+    """Reset the process-wide tally to a prior :func:`snapshot`. In-place
+    mutation, never rebinding — importers hold references to GLOBAL."""
+    GLOBAL["traces"] = value

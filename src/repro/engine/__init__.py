@@ -38,5 +38,12 @@ def explain(query: AnalyticsQuery) -> PlanReport:
     return DEFAULT.explain(query)
 
 
+def explain_analyze(query: AnalyticsQuery):
+    """EXPLAIN ANALYZE on the default engine: run the chosen plan under
+    the tracer and return the predicted-vs-measured ``obs.DriftReport``
+    (see ``Engine.explain_analyze``)."""
+    return DEFAULT.explain_analyze(query)
+
+
 def cache_info() -> dict:
     return DEFAULT.cache_info()

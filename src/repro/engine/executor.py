@@ -22,6 +22,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import convergence, ordering as ordering_lib
 from repro.core.tracecount import counted_jit as _counted_jit  # noqa: F401
 from repro.engine import catalog, planner as planner_lib, program as program_lib
@@ -162,21 +163,24 @@ class Engine:
             return hit
         self.stats["plan_cache_misses"] += 1
 
-        _, task, agg = self._aggregate_for(query)
-        counter = {"traces": 0}
-        loss_counter = {"traces": 0}
-        compiled_prog = program_lib.build_program(
-            task, agg, program_lib.EpochProgram(plan=plan),
-            n_examples=query.n_examples, counter=counter,
-        )
-        epoch_fn = (
-            compiled_prog.runner
-            if plan.parallelism == "sharded"
-            else compiled_prog.epoch_fn
-        )
-        loss_fn = _counted_jit(
-            lambda model, data: task.full_loss(model, data), loss_counter
-        )
+        with obs.span("engine.compile", task=query.task, axes=plan.axes()):
+            t0 = time.perf_counter()
+            _, task, agg = self._aggregate_for(query)
+            counter = {"traces": 0}
+            loss_counter = {"traces": 0}
+            compiled_prog = program_lib.build_program(
+                task, agg, program_lib.EpochProgram(plan=plan),
+                n_examples=query.n_examples, counter=counter,
+            )
+            epoch_fn = (
+                compiled_prog.runner
+                if plan.parallelism == "sharded"
+                else compiled_prog.epoch_fn
+            )
+            loss_fn = _counted_jit(
+                lambda model, data: task.full_loss(model, data), loss_counter
+            )
+            obs.metrics.observe("engine.compile_s", time.perf_counter() - t0)
         compiled = CompiledPlan(
             key=key, plan=plan, agg=agg, task=task,
             epoch_fn=epoch_fn, loss_fn=loss_fn, trace_counter=counter,
@@ -206,8 +210,83 @@ class Engine:
         if plan is None:
             report = self.explain(query)
             plan = report.chosen
-        compiled = self._compile(query, plan)
-        return _execute(compiled, query, report)
+        with obs.span("engine.run", task=query.task, axes=plan.axes()):
+            compiled = self._compile(query, plan)
+            return _execute(compiled, query, report)
+
+    # -- EXPLAIN ANALYZE ---------------------------------------------------
+
+    def explain_analyze(self, query: AnalyticsQuery) -> obs.DriftReport:
+        """Run the chosen plan under the span tracer and diff the cost
+        model against the walls it actually produced, per composed axis.
+
+        The predicted side re-prices the plan via
+        ``planner.cost_components`` at the epoch count the run actually
+        executed (a converged run stops early; the plan-time estimate
+        prices the full budget — epoch-count error is convergence
+        modeling, not calibration drift, and must not pollute the
+        per-second drift signal). The measured side maps the same axes
+        onto the run's walls: ordering <- the shuffle/placement wall,
+        parallelism <- the epoch fold wall, source <- the
+        ``engine.materialize`` span (Table.resolve), batching <- zero on
+        this single-query path (fused lanes are priced and measured on
+        the serving path). Loss evaluation is excluded from both sides —
+        the model never priced it. The report persists next to the plan
+        in the PlanStore (``load_analysis`` reads it back), so a fresh
+        process can detect stale calibration before trusting a stored
+        plan."""
+        report = self.explain(query)
+        plan = report.chosen
+        with obs.tracing() as rec:  # restores the caller's tracer state
+            res = self.run(query)
+        materialize_s = rec.total("engine.materialize")
+
+        comps, _ = planner_lib.cost_components(
+            plan, query, report.calibration, float(max(res.epochs, 1)),
+        )
+        rows = (
+            obs.AxisCost(
+                "ordering", comps["ordering"], res.shuffle_seconds,
+                "shuffle/placement wall (EngineResult.shuffle_seconds)",
+            ),
+            obs.AxisCost(
+                "parallelism", comps["parallelism"], res.gradient_seconds,
+                "epoch fold wall (EngineResult.gradient_seconds)",
+            ),
+            obs.AxisCost(
+                "batching", 0.0, 0.0,
+                "single-query run (B=1); fused lanes are priced on the "
+                "serving path",
+            ),
+            obs.AxisCost(
+                "source", comps["source"], materialize_s,
+                "engine.materialize span (Table.resolve)",
+            ),
+        )
+        analysis = obs.DriftReport(
+            axes=plan.axes(),
+            plan=plan.to_dict(),
+            rows=rows,
+            epochs_run=res.epochs,
+            predicted_total_s=sum(r.predicted_s for r in rows),
+            measured_total_s=sum(r.measured_s for r in rows),
+        )
+        if self.plan_store is not None:
+            self.plan_store.store_analysis(
+                self._query_plan_key(query), query, analysis
+            )
+        return analysis
+
+    def load_analysis(
+        self, query: AnalyticsQuery
+    ) -> Optional[obs.DriftReport]:
+        """The last persisted EXPLAIN ANALYZE for this query's plan key,
+        if the store holds one (e.g. written by a previous process)."""
+        if self.plan_store is None:
+            return None
+        return self.plan_store.load_analysis(
+            self._query_plan_key(query), query
+        )
 
 
 @dataclasses.dataclass
@@ -233,6 +312,16 @@ class EngineResult:
         return f"{head}\n{body}"
 
 
+def _eval_loss(compiled: CompiledPlan, agg, state, loss_data) -> float:
+    """One objective evaluation, timed into ``engine.loss_s`` (kept out
+    of the per-epoch fold walls — the cost model never prices it)."""
+    t0 = time.perf_counter()
+    with obs.span("engine.loss"):
+        value = float(compiled.loss_fn(agg.terminate(state), loss_data))
+    obs.metrics.observe("engine.loss_s", time.perf_counter() - t0)
+    return value
+
+
 def _execute(
     compiled: CompiledPlan,
     query: AnalyticsQuery,
@@ -255,7 +344,10 @@ def _execute(
     if stored and not streaming:
         # the plan chose random access (shuffle orderings, segmented
         # layouts): materialize through the one resolve seam
-        data = table_lib.resolve(data)
+        t0 = time.perf_counter()
+        with obs.span("engine.materialize", task=query.task):
+            data = table_lib.resolve(data)
+        obs.metrics.observe("engine.materialize_s", time.perf_counter() - t0)
     # the objective is a full-table aggregate either way (Table.arrays()
     # memoizes, so streamed runs pay this once, and only if a loss is
     # ever evaluated)
@@ -286,36 +378,39 @@ def _execute(
     converged = False
     epoch = 0
     for epoch in range(1, query.epochs + 1):
-        t0 = time.perf_counter()
-        if streaming:
-            examples = data  # the chunk stream IS the stored order
-        else:
-            examples, perm_rng = ordering.order(data, n, epoch, perm_rng)
-            jax.block_until_ready(examples)
-        t1 = time.perf_counter()
-        perm_rng, sub = jax.random.split(perm_rng)
-        if plan.scheme == "mrs":
-            state, buf_a, buf_b, _ = compiled.epoch_fn(carry, examples, sub)
-            # swap: the memory worker cycles last epoch's reservoir
-            carry = (state, buf_b, buf_a, jnp.bool_(True))
-        else:
-            state = compiled.epoch_fn(state, examples, sub)
-        jax.block_until_ready(state)
-        t2 = time.perf_counter()
+        with obs.span("epoch", index=epoch):
+            t0 = time.perf_counter()
+            if streaming:
+                examples = data  # the chunk stream IS the stored order
+            else:
+                examples, perm_rng = ordering.order(data, n, epoch, perm_rng)
+                jax.block_until_ready(examples)
+            t1 = time.perf_counter()
+            perm_rng, sub = jax.random.split(perm_rng)
+            if plan.scheme == "mrs":
+                state, buf_a, buf_b, _ = compiled.epoch_fn(
+                    carry, examples, sub
+                )
+                # swap: the memory worker cycles last epoch's reservoir
+                carry = (state, buf_b, buf_a, jnp.bool_(True))
+            else:
+                state = compiled.epoch_fn(state, examples, sub)
+            jax.block_until_ready(state)
+            t2 = time.perf_counter()
         shuffle_s += t1 - t0
         grad_s += t2 - t1
+        obs.metrics.observe("engine.epoch.shuffle_s", t1 - t0)
+        obs.metrics.observe("engine.epoch.grad_s", t2 - t1)
         # A stop rule needs the per-epoch objective; without one, a single
         # evaluation after the last epoch suffices (full_loss scans the
         # whole table — not free on the serving path).
         if stop is not None and compiled.loss_fn is not None:
-            losses.append(
-                float(compiled.loss_fn(agg.terminate(state), loss_data))
-            )
+            losses.append(_eval_loss(compiled, agg, state, loss_data))
             if stop(losses, epoch):
                 converged = True
                 break
     if stop is None and compiled.loss_fn is not None and epoch:
-        losses.append(float(compiled.loss_fn(agg.terminate(state), loss_data)))
+        losses.append(_eval_loss(compiled, agg, state, loss_data))
 
     return EngineResult(
         model=agg.terminate(state),

@@ -300,6 +300,94 @@ def _conv_multiplier(
     return mult, note
 
 
+def cost_components(
+    plan: Plan,
+    query: AnalyticsQuery,
+    cal: probes.Calibration,
+    est_epochs: float,
+    *,
+    batch: int = 1,
+    note: str = "",
+) -> Tuple[dict, str]:
+    """The cost model's arithmetic, decomposed along the EpochProgram
+    axes it prices: ``{"ordering": s, "parallelism": s, "source": s}``
+    whose sum is exactly :func:`program_cost`'s total. EXPLAIN ANALYZE
+    (``Engine.explain_analyze``) re-evaluates these at the epoch count
+    a run actually executed to put predicted next to measured per axis
+    — which is why this is a separate function and not three locals
+    inside ``program_cost``. Returns ``(components, note)`` (the note
+    gains the mesh-probe provenance for sharded plans)."""
+    n = query.n_examples
+    fold_row = cal.fold_per_row.get(plan.unroll) or min(
+        cal.fold_per_row.values()
+    )
+
+    # -- ordering axis: the cost of imposing the scan order --------------
+    if plan.parallelism == "sharded":
+        # shuffle orderings on the sharded path never materialize a
+        # host-side copy: the permutation gather rides inside every
+        # epoch's scan (uda.gather_fold), surcharged per epoch below
+        gather_row = (
+            cal.shuffle_per_row if plan.ordering != "clustered" else 0.0
+        )
+        ordering = gather_row * n * est_epochs
+    else:
+        shuffles = {"clustered": 0.0, "shuffle_once": 1.0,
+                    "shuffle_always": est_epochs}[plan.ordering]
+        # one-time/materialized shuffles are paid once per fused batch
+        ordering = cal.shuffle_per_row * n * shuffles / batch
+
+    # -- source axis: getting the rows resident ---------------------------
+    if _is_stored(query) and plan.source != "table":
+        # a stored table must be materialized once before any
+        # random-access plan runs (the streaming plan skips this)
+        source = cal.shuffle_per_row * n / batch
+    else:
+        source = 0.0
+
+    # -- parallelism axis: the epoch compute + merges ---------------------
+    if plan.parallelism == "sharded":
+        point = cal.shard.get(plan.num_shards)
+        if point is not None:
+            # mesh-probed, not modeled: steady-state local-epoch cost plus
+            # the fixed per-block cost at merge period H
+            blocks = math.ceil(est_epochs / plan.merge_period)
+            parallelism = point.epoch_seconds_per_row * n * est_epochs
+            parallelism += point.block_seconds * blocks
+            speedup = fold_row / max(point.epoch_seconds_per_row, 1e-12)
+            probe_note = (
+                f"mesh-probed {speedup:.2f}x/epoch over "
+                f"{point.devices} device(s)"
+            )
+            note = f"{note}; {probe_note}" if note else probe_note
+        else:
+            # hint-forced without a probed mesh point (single device or
+            # un-probed k): no claimed speedup
+            parallelism = fold_row * n * est_epochs
+            parallelism += cal.merge_seconds * plan.num_shards * math.ceil(
+                est_epochs / plan.merge_period
+            )
+            probe_note = "sharded without a mesh probe: modeled at serial cost"
+            note = f"{note}; {probe_note}" if note else probe_note
+    elif plan.scheme == "serial":
+        parallelism = fold_row * n * est_epochs
+    elif plan.scheme == "segmented":
+        # measured vmap'd segmented fold (interpolated off the probed
+        # point), not the old min(k, device_count) claim
+        per_epoch = cal.seg_per_row_at(plan.num_segments) * n
+        per_epoch += cal.merge_seconds * (plan.num_segments - 1)
+        parallelism = per_epoch * est_epochs
+    elif plan.scheme == "shared_memory":
+        parallelism = SM_OVERHEAD * fold_row * n * est_epochs
+    else:  # mrs: 1 I/O step + ratio memory steps per streamed tuple
+        parallelism = fold_row * n * (1 + plan.mrs_ratio) * est_epochs
+
+    return (
+        {"ordering": ordering, "parallelism": parallelism, "source": source},
+        note,
+    )
+
+
 def program_cost(
     plan: Plan,
     query: AnalyticsQuery,
@@ -318,8 +406,9 @@ def program_cost(
     materialized shuffle / table read) over the fused lanes; the
     per-epoch compute term stays per-lane — fused throughput gains come
     from dispatch amortization, which the serving benchmarks measure
-    rather than this model claiming them."""
-    n = query.n_examples
+    rather than this model claiming them. The arithmetic itself lives
+    in :func:`cost_components`, tagged per axis so EXPLAIN ANALYZE can
+    diff each axis against a traced run."""
     epochs = max(query.epochs, 1)
 
     mult, note = _conv_multiplier(plan, clusteredness, nonconvex)
@@ -331,68 +420,10 @@ def program_cost(
             "shuffled copy exceeds memory budget",
         )
 
-    fold_row = cal.fold_per_row.get(plan.unroll) or min(
-        cal.fold_per_row.values()
+    comps, note = cost_components(
+        plan, query, cal, est_epochs, batch=batch, note=note
     )
-    if plan.parallelism == "sharded":
-        # shuffle orderings on the sharded path never materialize a
-        # host-side copy: the permutation gather rides inside every
-        # epoch's scan (uda.gather_fold), costed below per epoch
-        cost = 0.0
-    else:
-        shuffles = {"clustered": 0.0, "shuffle_once": 1.0,
-                    "shuffle_always": est_epochs}[plan.ordering]
-        cost = cal.shuffle_per_row * n * shuffles
-    if _is_stored(query) and plan.source != "table":
-        # a stored table must be materialized once before any
-        # random-access plan runs (the streaming plan skips this)
-        cost += cal.shuffle_per_row * n
-    cost /= batch  # one-time costs are paid once per fused batch
-
-    if plan.parallelism == "sharded":
-        point = cal.shard.get(plan.num_shards)
-        # per-row gather surcharge of the in-scan permutation lanes
-        # (the probe measures the contiguous segments mode; the gather
-        # cost is anchored on the measured shuffle-gather constant)
-        gather_row = (
-            cal.shuffle_per_row if plan.ordering != "clustered" else 0.0
-        )
-        if point is not None:
-            # mesh-probed, not modeled: steady-state local-epoch cost plus
-            # the fixed per-block cost at merge period H
-            blocks = math.ceil(est_epochs / plan.merge_period)
-            cost += (
-                (point.epoch_seconds_per_row + gather_row) * n * est_epochs
-            )
-            cost += point.block_seconds * blocks
-            speedup = fold_row / max(point.epoch_seconds_per_row, 1e-12)
-            probe_note = (
-                f"mesh-probed {speedup:.2f}x/epoch over "
-                f"{point.devices} device(s)"
-            )
-            note = f"{note}; {probe_note}" if note else probe_note
-        else:
-            # hint-forced without a probed mesh point (single device or
-            # un-probed k): no claimed speedup
-            cost += (fold_row + gather_row) * n * est_epochs
-            cost += cal.merge_seconds * plan.num_shards * math.ceil(
-                est_epochs / plan.merge_period
-            )
-            probe_note = "sharded without a mesh probe: modeled at serial cost"
-            note = f"{note}; {probe_note}" if note else probe_note
-    elif plan.scheme == "serial":
-        cost += fold_row * n * est_epochs
-    elif plan.scheme == "segmented":
-        # measured vmap'd segmented fold (interpolated off the probed
-        # point), not the old min(k, device_count) claim
-        per_epoch = cal.seg_per_row_at(plan.num_segments) * n
-        per_epoch += cal.merge_seconds * (plan.num_segments - 1)
-        cost += per_epoch * est_epochs
-    elif plan.scheme == "shared_memory":
-        cost += SM_OVERHEAD * fold_row * n * est_epochs
-    else:  # mrs: 1 I/O step + ratio memory steps per streamed tuple
-        cost += fold_row * n * (1 + plan.mrs_ratio) * est_epochs
-
+    cost = comps["ordering"] + comps["source"] + comps["parallelism"]
     return Candidate(plan, cost, est_epochs, note)
 
 

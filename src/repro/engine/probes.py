@@ -18,6 +18,8 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
+
 
 def time_call(fn, *args, warmup: int = 1, iters: int = 3) -> float:
     """Median wall time (seconds) of fn(*args) with block_until_ready."""
@@ -139,6 +141,12 @@ def calibrate(agg, data, key: Tuple, *, unrolls=(1, 8)) -> Calibration:
     if key in _CACHE:
         return _CACHE[key]
     stats["probe_runs"] += 1
+    obs.metrics.inc("probes.runs")
+    _t_calibrate = time.perf_counter()
+    # opened manually (closed before the return) to avoid reindenting
+    # the measurement body; an exception aborts the whole query anyway
+    _span = obs.span("probe.calibrate", task=key[0] if key else "")
+    _span.__enter__()
 
     from repro.engine import table as table_lib
 
@@ -209,6 +217,10 @@ def calibrate(agg, data, key: Tuple, *, unrolls=(1, 8)) -> Calibration:
         device_count=device_count,
     )
     _CACHE[key] = cal
+    _span.__exit__(None, None, None)
+    obs.metrics.observe(
+        "probes.calibrate_s", time.perf_counter() - _t_calibrate
+    )
     return cal
 
 

@@ -787,6 +787,26 @@ def build_program(
     and the serving front-end (``batch>1``) all get their executables
     here, which is what makes a new axis land once instead of four
     times."""
+    from repro import obs
+
+    obs.metrics.inc("program.builds")
+    with obs.span(
+        "program.build", axes=prog.plan.axes() if hasattr(prog.plan, "axes")
+        else "", batch=prog.batch,
+    ):
+        return _build_program(
+            task, agg, prog, n_examples=n_examples, counter=counter
+        )
+
+
+def _build_program(
+    task,
+    agg,
+    prog: EpochProgram,
+    *,
+    n_examples: int,
+    counter: Optional[Dict[str, int]] = None,
+) -> CompiledProgram:
     counter = counter if counter is not None else fresh_counter()
     plan = prog.plan
     if prog.batch < 1:

@@ -66,6 +66,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.engine import executor, planner as planner_lib
 from repro.engine import probes, program as program_lib
 from repro.engine import table as table_lib
@@ -136,13 +137,57 @@ class PlanStore:
         self, plan_key: Tuple, query: AnalyticsQuery,
         report: planner_lib.PlanReport,
     ) -> None:
+        self._write(
+            self._path(plan_key), plan_key, query,
+            {"report": report.to_dict()},
+        )
+
+    # -- EXPLAIN ANALYZE persistence --------------------------------------
+    # The drift report lives NEXT TO the plan entry (same digest, its own
+    # file) so the last measured run travels with the stored plan: a
+    # fresh process can check calibration staleness before trusting it.
+
+    def _analysis_path(self, plan_key: Tuple) -> str:
+        return self._path(plan_key)[: -len(".json")] + ".analyze.json"
+
+    def load_analysis(
+        self, plan_key: Tuple, query: AnalyticsQuery
+    ) -> Optional[obs.DriftReport]:
+        try:
+            with open(self._analysis_path(plan_key)) as f:
+                entry = json.load(f)
+        except (OSError, ValueError):
+            return None
+        if (
+            entry.get("version") != FORMAT_VERSION
+            or entry.get("key") != repr(plan_key)
+            or entry.get("fingerprint") != query.content_fingerprint()
+        ):
+            return None
+        try:
+            return obs.DriftReport.from_dict(entry["analysis"])
+        except (KeyError, TypeError, ValueError):
+            return None
+
+    def store_analysis(
+        self, plan_key: Tuple, query: AnalyticsQuery,
+        analysis: obs.DriftReport,
+    ) -> None:
+        self._write(
+            self._analysis_path(plan_key), plan_key, query,
+            {"analysis": analysis.to_dict()},
+        )
+
+    def _write(
+        self, path: str, plan_key: Tuple, query: AnalyticsQuery,
+        payload: dict,
+    ) -> None:
         entry = {
             "version": FORMAT_VERSION,
             "key": repr(plan_key),
             "fingerprint": query.content_fingerprint(),
-            "report": report.to_dict(),
+            **payload,
         }
-        path = self._path(plan_key)
         tmp = f"{path}.tmp.{os.getpid()}"
         try:
             with open(tmp, "w") as f:
@@ -243,8 +288,11 @@ class ServingEngine:
         self.stats = {
             "accepted": 0,
             "rejected": 0,
+            "shed_queue_full": 0,  # rejected: total queue bound
+            "shed_task_limit": 0,  # rejected: per-task depth limit
             "batches": 0,
             "batched_queries": 0,
+            "fused_lanes": 0,  # lanes that rode a fused (batch>1) call
             "masked_batches": 0,  # fused groups with heterogeneous epochs
             "singleton_queries": 0,
             "failed_queries": 0,
@@ -256,14 +304,19 @@ class ServingEngine:
         now = time.perf_counter()
         if len(self._queue) >= self.config.max_queue:
             self.stats["rejected"] += 1
+            self.stats["shed_queue_full"] += 1
+            obs.metrics.inc("serve.shed.queue_full")
             return Ticket(query, False, REJECT_QUEUE_FULL, submit_s=now)
         if self._queued_per_task[query.task] >= self.config.max_per_task:
             self.stats["rejected"] += 1
+            self.stats["shed_task_limit"] += 1
+            obs.metrics.inc("serve.shed.task_limit")
             return Ticket(query, False, REJECT_TASK_LIMIT, submit_s=now)
         ticket = Ticket(query, True, submit_s=now)
         self._queue.append(ticket)
         self._queued_per_task[query.task] += 1
         self.stats["accepted"] += 1
+        obs.metrics.inc("serve.accepted")
         return ticket
 
     @property
@@ -332,6 +385,11 @@ class ServingEngine:
                 self._queue.remove(t)
                 self._queued_per_task[t.query.task] -= 1
             group.extend(matches)
+        dequeued = time.perf_counter()
+        for t in group:
+            obs.metrics.observe(
+                f"serve.queue_wait_s.{t.query.task}", dequeued - t.submit_s
+            )
 
         # one bad query must not take the server loop (or the rest of the
         # queue) down with it: failures complete the ticket with an error
@@ -343,6 +401,8 @@ class ServingEngine:
             elif self._run_batch(group, key[1]):
                 self.stats["batches"] += 1
                 self.stats["batched_queries"] += len(group)
+                self.stats["fused_lanes"] += len(group)
+                obs.metrics.inc("serve.fused_lanes", len(group))
                 if len({t.query.epochs for t in group}) > 1:
                     self.stats["masked_batches"] += 1
             else:
@@ -361,6 +421,11 @@ class ServingEngine:
             # tickets already served (the sharded distinct-table fallback
             # completes them one by one) are successes, not casualties
             self.stats["singleton_queries"] += len(group) - errored
+        for t in group:
+            if t.done_s is not None and t.error is None:
+                obs.metrics.observe(
+                    f"serve.latency_s.{t.query.task}", t.done_s - t.submit_s
+                )
         return len(group)
 
     def drain(self) -> int:
@@ -373,6 +438,52 @@ class ServingEngine:
             total += done
 
     # -- batched execution ------------------------------------------------
+
+    @staticmethod
+    def _timed_phases(assemble, execute) -> Tuple[Any, Any, float, float]:
+        """One timing discipline for both fused paths: run ``assemble``
+        (input staging — stacking/placement/permutation) then ``execute``
+        (the fused epochs), each blocked-until-ready under its own obs
+        span, and feed the serve.* wall histograms. Returns
+        ``(assembled, executed, assemble_s, execute_s)``."""
+        t0 = time.perf_counter()
+        with obs.span("serve.assemble"):
+            assembled = assemble()
+            jax.block_until_ready(assembled)
+        t1 = time.perf_counter()
+        with obs.span("serve.execute"):
+            executed = execute(assembled)
+            jax.block_until_ready(executed)
+        t2 = time.perf_counter()
+        obs.metrics.observe("serve.assembly_s", t1 - t0)
+        obs.metrics.observe("serve.execute_s", t2 - t1)
+        return assembled, executed, t1 - t0, t2 - t1
+
+    def _finish_group(
+        self, tickets: List[Ticket], models, losses,
+        plan: planner_lib.Plan, *, shuffle_s: float, grad_s: float,
+        trace_count: int,
+    ) -> None:
+        """Per-ticket completion shared by both fused paths: slice lane
+        ``i`` out of the stacked models/losses and stamp an
+        ``EngineResult`` whose walls are amortized over the batch (the
+        whole group paid them once)."""
+        b = len(tickets)
+        done = time.perf_counter()
+        for i, t in enumerate(tickets):
+            t.result = executor.EngineResult(
+                model=jax.tree.map(lambda x: x[i], models),
+                losses=[float(losses[i])],
+                epochs=t.query.epochs,
+                converged=False,
+                plan=plan,
+                report=None,
+                shuffle_seconds=shuffle_s / b,
+                gradient_seconds=grad_s / b,
+                trace_count=trace_count,
+                batch_size=b,
+            )
+            t.done_s = done
 
     def _batched_put(self, key: Tuple, compiled) -> None:
         """Retain a fused executable, evicting FIFO past the bound (each
@@ -458,32 +569,35 @@ class ServingEngine:
         base, keys = _vseed(jnp.asarray([q.seed for q in queries]))
         states = compiled.init_fn(base)
 
-        t0 = time.perf_counter()
-        if compiled.mode == "fixed" and plan.ordering == "shuffle_once":
-            # ShuffleOnce consumes one split, then streams the same
-            # permuted copy every epoch — one batched gather up front
-            keys, subs = _vsplit(keys)
-            source = (
-                q0.data if shared_table
-                else jax.tree.map(
-                    lambda *xs: jnp.stack(xs), *[q.data for q in queries]
+        def assemble():
+            nonlocal keys
+            if compiled.mode == "fixed" and plan.ordering == "shuffle_once":
+                # ShuffleOnce consumes one split, then streams the same
+                # permuted copy every epoch — one batched gather up front
+                keys, subs = _vsplit(keys)
+                source = (
+                    q0.data if shared_table
+                    else jax.tree.map(
+                        lambda *xs: jnp.stack(xs),
+                        *[q.data for q in queries],
+                    )
                 )
-            )
-            examples = compiled.prep_fn(source, subs)
-        elif shared_table:
-            # one shared table: fused runs shuffle it on device in-run;
-            # clustered lanes stream it in place
-            examples = q0.data
-        else:
-            examples = jax.tree.map(
+                return compiled.prep_fn(source, subs)
+            if shared_table:
+                # one shared table: fused runs shuffle it on device
+                # in-run; clustered lanes stream it in place
+                return q0.data
+            return jax.tree.map(
                 lambda *xs: jnp.stack(xs), *[q.data for q in queries]
             )
-        jax.block_until_ready(examples)
-        t1 = time.perf_counter()
-        states, _ = compiled.run_fn(states, examples, keys, budgets)
-        jax.block_until_ready(states)
-        shuffle_s = t1 - t0
-        grad_s = time.perf_counter() - t1
+
+        def execute(examples):
+            out, _ = compiled.run_fn(states, examples, keys, budgets)
+            return out
+
+        examples, states, shuffle_s, grad_s = self._timed_phases(
+            assemble, execute
+        )
 
         models = jax.vmap(compiled.agg.terminate)(states)
         if shared_table:
@@ -497,22 +611,12 @@ class ServingEngine:
         else:
             loss_src = examples  # already the raw stacked tables
         losses = jax.device_get(compiled.loss_fn(models, loss_src))
-        done = time.perf_counter()
-        for i, t in enumerate(tickets):
-            t.result = executor.EngineResult(
-                model=jax.tree.map(lambda x: x[i], models),
-                losses=[float(losses[i])],
-                epochs=t.query.epochs,
-                converged=False,
-                plan=compiled.plan,  # incl. the re-probed batch unroll
-                report=None,
-                # amortized: the whole batch paid this once
-                shuffle_seconds=shuffle_s / b,
-                gradient_seconds=grad_s / b,
-                trace_count=compiled.trace_counter["traces"],
-                batch_size=b,
-            )
-            t.done_s = done
+        self._finish_group(
+            tickets, models, losses,
+            compiled.plan,  # incl. the re-probed batch unroll
+            shuffle_s=shuffle_s, grad_s=grad_s,
+            trace_count=compiled.trace_counter["traces"],
+        )
         return True
 
     def _run_batch_sharded(
@@ -546,45 +650,51 @@ class ServingEngine:
             )
             self._batched_put(key, aux)
 
-        t0 = time.perf_counter()
-        base, pkeys = _vseed(jnp.asarray([q.seed for q in queries]))
-        mode, args, keys = shard_lib.place_batched_inputs(
-            runner, q0.data, n, pkeys
-        )
-        states = aux.init_fn(base)
-        jax.block_until_ready((args, states))
-        t1 = time.perf_counter()
-        done_epochs = 0
-        while done_epochs < epochs:
-            block_len = min(plan.merge_period, epochs - done_epochs)
-            fn = runner.batched_block(mode, block_len, n, b)
-            done_arr = jnp.int32(done_epochs)
-            if mode == "perm_epoch":
-                states, keys = fn(states, args[0], keys, budgets, done_arr)
-            else:
-                states = fn(states, *args, budgets, done_arr)
-            done_epochs += block_len
-        jax.block_until_ready(states)
-        shuffle_s = t1 - t0
-        grad_s = time.perf_counter() - t1
+        def assemble():
+            base, pkeys = _vseed(jnp.asarray([q.seed for q in queries]))
+            mode, args, keys = shard_lib.place_batched_inputs(
+                runner, q0.data, n, pkeys
+            )
+            return (mode, args, keys, aux.init_fn(base))
+
+        def execute(placed):
+            mode, args, keys, states = placed
+            done_epochs = 0
+            while done_epochs < epochs:
+                block_len = min(plan.merge_period, epochs - done_epochs)
+                fn = runner.batched_block(mode, block_len, n, b)
+                done_arr = jnp.int32(done_epochs)
+                if mode == "perm_epoch":
+                    states, keys = fn(
+                        states, args[0], keys, budgets, done_arr
+                    )
+                else:
+                    states = fn(states, *args, budgets, done_arr)
+                done_epochs += block_len
+            return states
+
+        _, states, shuffle_s, grad_s = self._timed_phases(assemble, execute)
 
         models = jax.vmap(runner.agg.terminate)(states)
         losses = jax.device_get(aux.loss_fn(models, q0.data))
-        done = time.perf_counter()
-        for i, t in enumerate(tickets):
-            t.result = executor.EngineResult(
-                model=jax.tree.map(lambda x: x[i], models),
-                losses=[float(losses[i])],
-                epochs=t.query.epochs,
-                converged=False,
-                plan=plan,
-                report=None,
-                shuffle_seconds=shuffle_s / b,
-                gradient_seconds=grad_s / b,
-                trace_count=compiled.trace_counter["traces"],
-                batch_size=b,
-            )
-            t.done_s = done
+        self._finish_group(
+            tickets, models, losses, plan,
+            shuffle_s=shuffle_s, grad_s=grad_s,
+            trace_count=compiled.trace_counter["traces"],
+        )
+
+    def metrics(self) -> Dict[str, Any]:
+        """The serving surface in one read: the admission/batching
+        counters (including the shed and fused-lane tallies), live queue
+        state, and the obs registry's ``serve.*`` aggregates — per-task
+        queue-wait and end-to-end latency histograms (p50/p99) plus the
+        fused assembly/execute wall breakdown."""
+        return dict(
+            self.stats,
+            queue_depth=self.queue_depth,
+            batched_plans=len(self._batched),
+            obs=obs.metrics.snapshot("serve."),
+        )
 
     def cache_info(self) -> Dict[str, int]:
         return dict(

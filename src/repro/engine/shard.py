@@ -29,6 +29,7 @@ from typing import Any, List, Optional, Tuple
 
 import jax
 
+from repro import obs
 from repro.core import convergence
 from repro.dist import data_parallel as dp
 from repro.engine import table as table_lib
@@ -171,9 +172,11 @@ def execute(compiled, query, report) -> "Any":
     state = agg.initialize(rng)
 
     t0 = time.perf_counter()
-    mode, args, key, perm_rng = place_inputs(runner, data, n, perm_rng)
-    jax.block_until_ready(args)
+    with obs.span("shard.place", ordering=plan.ordering, k=plan.num_shards):
+        mode, args, key, perm_rng = place_inputs(runner, data, n, perm_rng)
+        jax.block_until_ready(args)
     shuffle_s = time.perf_counter() - t0
+    obs.metrics.observe("shard.place_s", shuffle_s)
 
     losses: List[float] = []
     grad_s = 0.0
@@ -183,12 +186,18 @@ def execute(compiled, query, report) -> "Any":
         block_len = min(plan.merge_period, query.epochs - done)
         fn = runner.block(mode, block_len, n)
         t1 = time.perf_counter()
-        if mode == "perm_epoch":
-            state, key = fn(state, args[0], key)
-        else:
-            state = fn(state, *args)
-        jax.block_until_ready(state)
-        grad_s += time.perf_counter() - t1
+        with obs.span("shard.block", epochs=block_len, k=plan.num_shards):
+            if mode == "perm_epoch":
+                state, key = fn(state, args[0], key)
+            else:
+                state = fn(state, *args)
+            jax.block_until_ready(state)
+        block_s = time.perf_counter() - t1
+        obs.metrics.observe("shard.block_s", block_s)
+        # merge staleness: local models drift for block_len epochs
+        # between model-averaging merges (the H in local SGD)
+        obs.metrics.set_gauge("shard.merge_staleness_epochs", block_len)
+        grad_s += block_s
         done += block_len
         # the merged (global) model exists exactly at block boundaries —
         # the natural granularity for the objective and stop rules

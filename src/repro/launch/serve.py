@@ -15,11 +15,13 @@ Two serving surfaces share this module:
 
 from __future__ import annotations
 
+import os
 from typing import Iterable, List, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.engine import serve as serve_lib
 from repro.models import lm
 
@@ -46,14 +48,25 @@ def serve_analytics(
     queries: Iterable,
     *,
     server: Optional[serve_lib.ServingEngine] = None,
+    trace_dir: Optional[str] = None,
     **server_kw,
 ) -> List[serve_lib.Ticket]:
     """Submit ``queries`` (admission-controlled), drain the queue, and
     return one ticket per query — rejected ones carry ``reject_reason``
-    instead of a result."""
+    instead of a result. With ``trace_dir``, the whole load runs under
+    the span tracer and ``serve.jsonl`` / ``serve.trace.json`` (Chrome
+    trace) are written there after the drain."""
     srv = server if server is not None else make_analytics_server(**server_kw)
-    tickets = [srv.submit(q) for q in queries]
-    srv.drain()
+    if trace_dir is None:
+        tickets = [srv.submit(q) for q in queries]
+        srv.drain()
+        return tickets
+    os.makedirs(trace_dir, exist_ok=True)
+    with obs.tracing() as rec:
+        tickets = [srv.submit(q) for q in queries]
+        srv.drain()
+    rec.export_jsonl(os.path.join(trace_dir, "serve.jsonl"))
+    rec.export_chrome_trace(os.path.join(trace_dir, "serve.trace.json"))
     return tickets
 
 

@@ -1,0 +1,67 @@
+"""repro.obs — the unified tracing/metrics layer.
+
+The paper's thesis — one architecture so performance can be studied
+generically — needs one *measurement* layer to match: before this
+module, every execution driver (executor, serving front-end, sharded
+driver) carried its own private ``time.perf_counter()`` arithmetic and
+nothing could answer "where did this query's time go" across layers,
+let alone "did the planner's calibrated cost model predict the run it
+chose". Three pieces:
+
+* **Span tracer** (``obs.span("compile")``, ``obs.span("epoch",
+  index=i)``) — a process-global recorder with JSONL and Chrome-trace
+  export. Disabled (the default) it is a no-op closure: one global
+  check returning a shared null context manager, guarded by an
+  overhead bench row. See :mod:`repro.obs.trace`.
+* **Metrics registry** (``obs.metrics``) — counters, gauges, and
+  fixed-log-bucket latency histograms with p50/p99. Always on; absorbs
+  the timers the drivers used to keep privately (epoch/compile/loss
+  walls, serve admission/queue-wait/assembly/execute breakdown, shard
+  block walls) plus process-wide sources registered below (the
+  ``tracecount`` retrace tally). See :mod:`repro.obs.metrics`.
+* **Drift detection** (``engine.explain_analyze(query)``) — run the
+  chosen plan under the tracer and emit predicted-vs-measured cost per
+  composed EpochProgram axis with drift ratios, persisted next to the
+  plan in ``PlanStore``. See :mod:`repro.obs.drift`.
+
+Typical use::
+
+    from repro import obs
+
+    with obs.tracing() as rec:
+        engine.run(query)
+    rec.export_jsonl("trace.jsonl")
+    print(obs.metrics.snapshot("engine."))
+"""
+
+from repro.obs import drift, metrics, trace  # noqa: F401
+from repro.obs.drift import AxisCost, DriftReport  # noqa: F401
+from repro.obs.trace import (  # noqa: F401
+    NULL_SPAN,
+    Recorder,
+    disable,
+    enable,
+    enabled,
+    get_recorder,
+    span,
+    tracing,
+)
+
+
+def _install_sources() -> None:
+    """Register the process-wide callback-gauge sources (re-run after a
+    registry reset): the shared retrace tally is a metric like any
+    other, so dashboards see recompiles next to latencies."""
+    from repro.core import tracecount
+
+    metrics.gauge("core.retraces", fn=tracecount.global_traces)
+
+
+def reset_metrics() -> None:
+    """Clear every metric, then re-register the built-in sources. The
+    test fixtures use this so aggregates cannot leak between tests."""
+    metrics.REGISTRY.reset()
+    _install_sources()
+
+
+_install_sources()

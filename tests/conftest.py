@@ -14,3 +14,21 @@ except ImportError:  # container image has no hypothesis; use the shim
     import _hypothesis_shim
 
     _hypothesis_shim.install()
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(autouse=True)
+def _obs_isolation():
+    """Process-wide observability state must not leak between tests:
+    snapshot/restore the shared retrace tally, and force the tracer off
+    and the metrics registry empty afterwards (a test that enables
+    tracing or bumps counters must not change what the next one sees)."""
+    from repro import obs
+    from repro.core import tracecount
+
+    tally = tracecount.snapshot()
+    yield
+    tracecount.restore(tally)
+    obs.disable()
+    obs.reset_metrics()

@@ -47,6 +47,8 @@ def test_batched_results_match_serial():
     assert srv.drain() == 3
     assert srv.stats["batches"] == 1
     assert srv.stats["batched_queries"] == 3
+    assert srv.stats["fused_lanes"] == 3
+    assert srv.metrics()["obs"]["serve.fused_lanes"]["value"] == 3
     for t, ref in zip(tickets, serial):
         assert t.done and t.result.batch_size == 3
         np.testing.assert_allclose(
@@ -221,6 +223,16 @@ def test_admission_sheds_load_beyond_queue_bound():
     assert srv.drain() == 2
     assert all(t.done for t in tickets[:2])
     assert srv.stats["rejected"] == 2
+    assert srv.stats["shed_queue_full"] == 2
+    assert srv.stats["shed_task_limit"] == 0
+    m = srv.metrics()
+    assert m["shed_queue_full"] == 2
+    assert m["queue_depth"] == 0
+    assert m["obs"]["serve.shed.queue_full"]["value"] == 2
+    assert m["obs"]["serve.accepted"]["value"] == 2
+    # per-task latency histogram saw both served queries
+    lat = m["obs"]["serve.latency_s.logreg"]
+    assert lat["count"] == 2 and lat["p99"] >= lat["p50"] > 0
 
 
 def test_admission_per_task_limit():
@@ -237,6 +249,8 @@ def test_admission_per_task_limit():
     assert t1.accepted and t3.accepted
     assert not t2.accepted
     assert t2.reject_reason == serve.REJECT_TASK_LIMIT
+    assert srv.stats["shed_task_limit"] == 1
+    assert srv.stats["shed_queue_full"] == 0
     srv.drain()
     assert t1.done and t3.done
 
