@@ -74,6 +74,27 @@ def run(quick: bool = True):
         f"warm_frac={frac:.2e};budget={OBS_OVERHEAD_BUDGET}",
     ))
 
+    # flight-recorder overhead guard, same discipline: the always-on
+    # span ring must price a warm run's spans under the same budget
+    # (Span allocation + ring append instead of the shared null span).
+    obs.flight.enable()
+    flight_cost = obs.flight.recording_span_cost()
+    obs.flight.disable()
+    added_flight = n_spans * flight_cost
+    frac_flight = added_flight / t_warm
+    if frac_flight > OBS_OVERHEAD_BUDGET:
+        raise RuntimeError(
+            f"flight-recorder overhead {added_flight * 1e6:.1f}us is "
+            f"{frac_flight:.1%} of the warm wall ({t_warm * 1e3:.1f}ms) "
+            f"— over the {OBS_OVERHEAD_BUDGET:.0%} budget; the ring is "
+            f"no longer cheap enough to leave always-on"
+        )
+    rows.append(row(
+        "engine_flight_overhead", added_flight,
+        f"spans={n_spans};ns_per_span={flight_cost * 1e9:.0f};"
+        f"warm_frac={frac_flight:.2e};budget={OBS_OVERHEAD_BUDGET}",
+    ))
+
     # planner vs forced-clustered on the CA-TX pathology
     catx = ordering.make_catx_dataset(n // 2)
     qc = engine.AnalyticsQuery(

@@ -13,6 +13,9 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== timer lint (raw perf_counter stays out of the library) =="
+python scripts/lint_timers.py
+
 echo "== tier-1 tests =="
 python -m pytest -x -q
 

@@ -240,6 +240,9 @@ class Engine:
         with obs.tracing() as rec:  # restores the caller's tracer state
             res = self.run(query)
         materialize_s = rec.total("engine.materialize")
+        attribution = obs.attribution.attribute(
+            rec.spans, root_name="engine.run"
+        )
 
         comps, _ = planner_lib.cost_components(
             plan, query, report.calibration, float(max(res.epochs, 1)),
@@ -270,6 +273,15 @@ class Engine:
             epochs_run=res.epochs,
             predicted_total_s=sum(r.predicted_s for r in rows),
             measured_total_s=sum(r.measured_s for r in rows),
+            attribution=(
+                attribution.to_dict() if attribution is not None else None
+            ),
+        )
+        # surface the verdict as gauges so SLO rules (and /metrics
+        # scrapes) can watch calibration staleness without re-analyzing
+        obs.metrics.set_gauge("engine.drift_ratio", analysis.drift)
+        obs.metrics.set_gauge(
+            "engine.calibration_stale", 1.0 if analysis.stale else 0.0
         )
         if self.plan_store is not None:
             self.plan_store.store_analysis(

@@ -67,6 +67,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import obs
+from repro.obs import flight as flight_lib, slo as slo_lib
 from repro.engine import executor, planner as planner_lib
 from repro.engine import probes, program as program_lib
 from repro.engine import table as table_lib
@@ -105,6 +106,20 @@ class PlanStore:
     def __init__(self, root: str):
         self.root = root
         os.makedirs(root, exist_ok=True)
+
+    def size(self) -> int:
+        """Live plan-entry count (analysis/tmp/parked files excluded) —
+        registered as the ``serve.plan_store_entries`` callback gauge so
+        snapshots see the store grow."""
+        try:
+            names = os.listdir(self.root)
+        except OSError:
+            return 0
+        return sum(
+            1 for n in names
+            if n.startswith("plan_") and n.endswith(".json")
+            and not n.endswith(".analyze.json")
+        )
 
     def _path(self, plan_key: Tuple) -> str:
         digest = hashlib.sha256(repr(plan_key).encode()).hexdigest()[:32]
@@ -219,6 +234,17 @@ class ServeConfig:
     # running server seeing many burst sizes must not accumulate them
     # unboundedly
     max_compiled_batches: int = 32
+    # always-on flight recorder: the serving engine installs a span ring
+    # of this many completed spans (0 opts out) so the last N spans are
+    # dumpable post-hoc — and land in every SLO incident file
+    flight_capacity: int = 256
+    # declarative SLOs (repro.obs.slo.SLORule tuple; None = unmonitored)
+    # evaluated between pump groups at slo_interval_s cadence; breaches
+    # dump the flight ring to incident_dir (default:
+    # <cache_dir>/incidents when a cache_dir is configured)
+    slo_rules: Optional[Tuple] = None
+    slo_interval_s: float = 1.0
+    incident_dir: Optional[str] = None
 
 
 _UNSET = object()  # sentinel: a ticket's batch key may legitimately be None
@@ -285,6 +311,26 @@ class ServingEngine:
         self._queue: collections.deque = collections.deque()
         self._queued_per_task: collections.Counter = collections.Counter()
         self._batched: Dict[Tuple, program_lib.CompiledProgram] = {}
+        # operational telemetry: the always-on flight ring, the live
+        # queue-depth / plan-store-size callback gauges (a snapshot or a
+        # /metrics scrape sees them without calling into the engine),
+        # and the SLO monitor pump() evaluates on its cadence
+        if config.flight_capacity:
+            flight_lib.enable(config.flight_capacity)
+        obs.metrics.gauge("serve.queue_depth", fn=lambda: len(self._queue))
+        store = self.engine.plan_store
+        if store is not None and hasattr(store, "size"):
+            obs.metrics.gauge("serve.plan_store_entries", fn=store.size)
+        self.slo: Optional[slo_lib.SLOMonitor] = None
+        if config.slo_rules:
+            incident_dir = config.incident_dir
+            if incident_dir is None and config.cache_dir:
+                incident_dir = os.path.join(config.cache_dir, "incidents")
+            self.slo = slo_lib.SLOMonitor(
+                config.slo_rules,
+                interval_s=config.slo_interval_s,
+                incident_dir=incident_dir,
+            )
         self.stats = {
             "accepted": 0,
             "rejected": 0,
@@ -390,42 +436,54 @@ class ServingEngine:
             obs.metrics.observe(
                 f"serve.queue_wait_s.{t.query.task}", dequeued - t.submit_s
             )
+        # the group span is what tail-latency attribution decomposes:
+        # admission wait is not a span, so the pump stamps the group's
+        # worst wait as an attribute for the queue_wait phase
+        max_wait = max(dequeued - t.submit_s for t in group)
 
         # one bad query must not take the server loop (or the rest of the
         # queue) down with it: failures complete the ticket with an error
-        try:
-            if len(group) == 1:
-                head.result = self.engine.run(head.query)
-                head.done_s = time.perf_counter()
-                self.stats["singleton_queries"] += 1
-            elif self._run_batch(group, key[1]):
-                self.stats["batches"] += 1
-                self.stats["batched_queries"] += len(group)
-                self.stats["fused_lanes"] += len(group)
-                obs.metrics.inc("serve.fused_lanes", len(group))
-                if len({t.query.epochs for t in group}) > 1:
-                    self.stats["masked_batches"] += 1
-            else:
-                # the group declined fusion at run time (sharded plan
-                # over distinct tables): served singleton, still done
-                self.stats["singleton_queries"] += len(group)
-        except Exception as e:  # noqa: BLE001
-            now = time.perf_counter()
-            errored = 0
-            for t in group:
-                if t.done_s is None:
-                    t.error = f"{type(e).__name__}: {e}"
-                    t.done_s = now
-                    errored += 1
-            self.stats["failed_queries"] += errored
-            # tickets already served (the sharded distinct-table fallback
-            # completes them one by one) are successes, not casualties
-            self.stats["singleton_queries"] += len(group) - errored
+        with obs.span(
+            "serve.pump", batch=len(group), queue_wait_s=max_wait
+        ):
+            try:
+                if len(group) == 1:
+                    head.result = self.engine.run(head.query)
+                    head.done_s = time.perf_counter()
+                    self.stats["singleton_queries"] += 1
+                elif self._run_batch(group, key[1]):
+                    self.stats["batches"] += 1
+                    self.stats["batched_queries"] += len(group)
+                    self.stats["fused_lanes"] += len(group)
+                    obs.metrics.inc("serve.fused_lanes", len(group))
+                    if len({t.query.epochs for t in group}) > 1:
+                        self.stats["masked_batches"] += 1
+                else:
+                    # the group declined fusion at run time (sharded plan
+                    # over distinct tables): served singleton, still done
+                    self.stats["singleton_queries"] += len(group)
+            except Exception as e:  # noqa: BLE001
+                now = time.perf_counter()
+                errored = 0
+                for t in group:
+                    if t.done_s is None:
+                        t.error = f"{type(e).__name__}: {e}"
+                        t.done_s = now
+                        errored += 1
+                self.stats["failed_queries"] += errored
+                # tickets already served (the sharded distinct-table
+                # fallback completes them one by one) are successes, not
+                # casualties
+                self.stats["singleton_queries"] += len(group) - errored
         for t in group:
             if t.done_s is not None and t.error is None:
                 obs.metrics.observe(
                     f"serve.latency_s.{t.query.task}", t.done_s - t.submit_s
                 )
+        # SLO cadence: between groups, never mid-batch — monitoring must
+        # not sit inside the fused call's wall
+        if self.slo is not None:
+            self.slo.maybe_evaluate()
         return len(group)
 
     def drain(self) -> int:
@@ -693,6 +751,7 @@ class ServingEngine:
             self.stats,
             queue_depth=self.queue_depth,
             batched_plans=len(self._batched),
+            slo_breaches=len(self.slo.breaches) if self.slo else 0,
             obs=obs.metrics.snapshot("serve."),
         )
 

@@ -24,6 +24,24 @@ chose". Three pieces:
   composed EpochProgram axis with drift ratios, persisted next to the
   plan in ``PlanStore``. See :mod:`repro.obs.drift`.
 
+On top of those sits the **operational tier** — telemetry as an
+always-on service rather than a before-the-run decision:
+
+* **Exposition** (:mod:`repro.obs.export`) — the registry rendered as
+  Prometheus text format and as a JSON snapshot, served by the stdlib
+  HTTP thread in :mod:`repro.launch.obs_server` (``/metrics``,
+  ``/snapshot``, ``/healthz``).
+* **Flight recorder** (:mod:`repro.obs.flight`) — a bounded span ring
+  cheap enough to leave on while full tracing is off, so the last N
+  spans are always dumpable post-hoc.
+* **SLO monitors** (:mod:`repro.obs.slo`) — declarative rules over the
+  registry (p99 latency, shed rate, queue depth, stale calibration)
+  evaluated on a cadence by ``ServingEngine.pump``; a breach dumps the
+  flight ring into a JSONL incident file.
+* **Tail-latency attribution** (:mod:`repro.obs.attribution`) —
+  critical-path phase shares (queue-wait/assemble/compile/execute/
+  merge) embedded in EXPLAIN ANALYZE reports and ``/snapshot``.
+
 Typical use::
 
     from repro import obs
@@ -34,8 +52,19 @@ Typical use::
     print(obs.metrics.snapshot("engine."))
 """
 
-from repro.obs import drift, metrics, trace  # noqa: F401
+from repro.obs import (  # noqa: F401
+    attribution,
+    drift,
+    export,
+    flight,
+    metrics,
+    slo,
+    trace,
+)
+from repro.obs.attribution import PhaseReport  # noqa: F401
 from repro.obs.drift import AxisCost, DriftReport  # noqa: F401
+from repro.obs.flight import FlightRecorder  # noqa: F401
+from repro.obs.slo import SLOMonitor, SLORule  # noqa: F401
 from repro.obs.trace import (  # noqa: F401
     NULL_SPAN,
     Recorder,
@@ -62,6 +91,22 @@ def reset_metrics() -> None:
     test fixtures use this so aggregates cannot leak between tests."""
     metrics.REGISTRY.reset()
     _install_sources()
+
+
+def reset_operational() -> None:
+    """Tear down the operational tier's process-global state (the test
+    fixtures' other half): tracer off, flight ring uninstalled, recent
+    SLO breaches cleared, and the obs HTTP server stopped if its module
+    was ever imported (checked via ``sys.modules`` so tests that never
+    start a server don't pay the import)."""
+    import sys
+
+    disable()
+    flight.disable()
+    slo.clear_breaches()
+    server_mod = sys.modules.get("repro.launch.obs_server")
+    if server_mod is not None:
+        server_mod.stop()
 
 
 _install_sources()

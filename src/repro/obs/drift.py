@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Tuple
+from typing import Optional, Tuple
 
 # Beyond this total measured/predicted ratio (either direction) the
 # calibration is considered stale. Micro-probes extrapolate a ~2048-row
@@ -81,6 +81,10 @@ class DriftReport:
     epochs_run: int
     predicted_total_s: float
     measured_total_s: float
+    # critical-path phase decomposition of the analyzed run
+    # (attribution.PhaseReport.to_dict()); None on pre-attribution
+    # entries loaded from an old PlanStore
+    attribution: Optional[dict] = None
 
     @property
     def drift(self) -> float:
@@ -120,6 +124,14 @@ class DriftReport:
             f"{ms(self.measured_total_s)}{ratio(self.drift):>8}"
             f"  over {self.epochs_run} epoch(s); calibration: {verdict}"
         )
+        if self.attribution is not None:
+            from repro.obs import attribution as attribution_lib
+
+            lines.append(
+                attribution_lib.PhaseReport.from_dict(
+                    self.attribution
+                ).describe()
+            )
         return "\n".join(lines)
 
     def to_dict(self) -> dict:
@@ -130,6 +142,7 @@ class DriftReport:
             "epochs_run": self.epochs_run,
             "predicted_total_s": self.predicted_total_s,
             "measured_total_s": self.measured_total_s,
+            "attribution": self.attribution,
             # derived fields persisted for grep-ability of stored entries
             "drift": None if math.isinf(self.drift) else self.drift,
             "stale": self.stale,
@@ -144,4 +157,6 @@ class DriftReport:
             epochs_run=d["epochs_run"],
             predicted_total_s=d["predicted_total_s"],
             measured_total_s=d["measured_total_s"],
+            # absent on entries persisted before the attribution field
+            attribution=d.get("attribution"),
         )

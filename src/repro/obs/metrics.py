@@ -125,18 +125,27 @@ class Histogram:
 
     @property
     def mean(self) -> float:
+        """Exact mean off the tracked sum — never bucket-midpoint
+        interpolation (quantiles interpolate; the mean must not)."""
         return self.total / self.count if self.count else 0.0
 
     def snapshot(self) -> dict:
+        # Additive keys only: "sum" (the exact tracked sum, Prometheus
+        # naming), "bucket_bounds"/"bucket_counts" (per-bucket raw counts,
+        # last entry = overflow past the final bound) feed the /metrics
+        # exposition; everything the pre-exposition schema had is kept.
         return {
             "type": "histogram",
             "count": self.count,
             "total": self.total,
+            "sum": self.total,
             "mean": self.mean,
             "min": self.vmin if self.count else 0.0,
             "max": self.vmax if self.count else 0.0,
             "p50": self.p50,
             "p99": self.p99,
+            "bucket_bounds": list(BUCKET_BOUNDS),
+            "bucket_counts": list(self.counts),
         }
 
 

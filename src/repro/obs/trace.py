@@ -146,6 +146,11 @@ class Recorder:
         }
         with self._lock:
             self.spans.append(record)
+        # mirror into the always-on flight ring (when installed) so the
+        # last-N window stays continuous across tracing on/off
+        fl = _FLIGHT
+        if fl is not None and fl is not self:
+            fl.push(record)
 
     # -- queries ----------------------------------------------------------
 
@@ -198,15 +203,30 @@ class Recorder:
 
 _ENABLED = False
 _RECORDER: Optional[Recorder] = None
+# The flight recorder (repro.obs.flight) installs itself here: a bounded
+# ring that keeps recording completed spans while full tracing is OFF.
+# None (the default) keeps span() the no-op the warm path relies on.
+_FLIGHT = None
 
 
 def span(name: str, **attrs):
     """A wall-clock span context manager. THE tracing entry point —
-    when tracing is disabled this is one global check returning the
-    shared null span (the no-op closure the warm path relies on)."""
-    if not _ENABLED:
-        return NULL_SPAN
-    return Span(_RECORDER, name, attrs)
+    with tracing disabled and no flight recorder installed this is two
+    module-global checks returning the shared null span (the no-op
+    closure the warm path relies on); with the flight recorder on, the
+    span records into its bounded ring instead (priced by
+    ``flight.recording_span_cost`` and bench-guarded)."""
+    if _ENABLED:
+        return Span(_RECORDER, name, attrs)
+    if _FLIGHT is not None:
+        return Span(_FLIGHT, name, attrs)
+    return NULL_SPAN
+
+
+def _install_flight(recorder) -> None:
+    """Called only by :mod:`repro.obs.flight` (un/install the ring)."""
+    global _FLIGHT
+    _FLIGHT = recorder
 
 
 def enabled() -> bool:
@@ -253,10 +273,14 @@ def tracing(recorder: Optional[Recorder] = None):
 def disabled_span_cost(iters: int = 50_000) -> float:
     """Measured per-call cost (seconds) of ``span()`` while tracing is
     off — the constant the overhead-guard bench row multiplies by the
-    spans a warm run emits. Raises if called with tracing enabled (it
-    would measure the wrong path)."""
-    if _ENABLED:
-        raise RuntimeError("disabled_span_cost measures the OFF path")
+    spans a warm run emits. Raises if called with tracing enabled or the
+    flight recorder installed (either would measure the wrong path;
+    flight's own path is priced by ``flight.recording_span_cost``)."""
+    if _ENABLED or _FLIGHT is not None:
+        raise RuntimeError(
+            "disabled_span_cost measures the fully-OFF path "
+            "(tracing disabled, no flight recorder)"
+        )
     t0 = time.perf_counter()
     for _ in range(iters):
         with span("overhead_probe"):

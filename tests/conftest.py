@@ -21,14 +21,16 @@ import pytest  # noqa: E402
 @pytest.fixture(autouse=True)
 def _obs_isolation():
     """Process-wide observability state must not leak between tests:
-    snapshot/restore the shared retrace tally, and force the tracer off
-    and the metrics registry empty afterwards (a test that enables
-    tracing or bumps counters must not change what the next one sees)."""
+    snapshot/restore the shared retrace tally, and force the tracer off,
+    the operational tier torn down (flight ring uninstalled, obs HTTP
+    server stopped, recent SLO breaches cleared) and the metrics
+    registry empty afterwards (a test that enables tracing, starts the
+    server or bumps counters must not change what the next one sees)."""
     from repro import obs
     from repro.core import tracecount
 
     tally = tracecount.snapshot()
     yield
     tracecount.restore(tally)
-    obs.disable()
+    obs.reset_operational()
     obs.reset_metrics()

@@ -339,6 +339,26 @@ def test_serving_engine_uses_disk_cache(tmp_path):
     assert srv2.engine.stats["plans_computed"] == 0
 
 
+def test_serving_engine_registers_operational_gauges(tmp_path):
+    """Queue depth and plan-store size are live callback gauges: they
+    read the engine's actual state at snapshot time, not a stale copy."""
+    from repro import obs
+
+    data = synthetic.dense_classification(RNG, 64, 4)
+    srv = serve.ServingEngine(
+        serve.ServeConfig(max_batch=4, cache_dir=str(tmp_path))
+    )
+    srv.submit(_q(data, seed=0))
+    srv.submit(_q(data, seed=1))
+    snap = obs.metrics.snapshot("serve.")
+    assert snap["serve.queue_depth"]["value"] == 2
+    assert snap["serve.plan_store_entries"]["value"] == 0
+    srv.drain()
+    snap = obs.metrics.snapshot("serve.")
+    assert snap["serve.queue_depth"]["value"] == 0
+    assert snap["serve.plan_store_entries"]["value"] >= 1
+
+
 # ---------------------------------------------------------------------------
 # trace-count observables
 # ---------------------------------------------------------------------------
