@@ -95,6 +95,54 @@ def run(quick: bool = True):
         f"warm_frac={frac_flight:.2e};budget={OBS_OVERHEAD_BUDGET}",
     ))
 
+    # implementation axis: the same epoch fold, measured per lane body
+    # on one slab — the XLA scan vs the fused Pallas kernel (interpret
+    # mode off-TPU) — plus the fraction of the roofline bound the
+    # better one reaches. The slab is sized so each wall clears the
+    # 30% gate's 5ms noise floor.
+    import functools
+
+    from benchmarks import roofline
+    from benchmarks.common import time_call
+    from repro.core import uda as uda_lib
+    from repro.engine import catalog
+    from repro.kernels.igd_fused import ops as igd_ops
+
+    kn, kd = 32768, 64
+    slab = synthetic.dense_classification(RNG, kn, kd)
+    spec = catalog.get("logreg")
+    task = spec.make_task(dim=kd)
+    agg = uda_lib.IGDAggregate(task, spec.step_size(kn), prox=spec.prox(task))
+    state0 = agg.initialize(jax.random.PRNGKey(0))
+
+    xla_epoch = jax.jit(lambda s, ex: uda_lib.fold(agg, s, ex))
+    t_xla = time_call(xla_epoch, state0, slab)
+    rows.append(row(
+        "engine_impl_xla", t_xla,
+        f"n={kn};d={kd};us_per_row={t_xla / kn * 1e6:.3f}",
+    ))
+
+    interpret = igd_ops.default_interpret()
+    kernel_epoch = functools.partial(
+        igd_ops.igd_fold, loss="lr", interpret=interpret
+    )
+    alphas = agg.step_size(jax.numpy.arange(kn))
+    t_pallas = time_call(kernel_epoch, slab["x"], slab["y"], alphas,
+                         state0.model)
+    rows.append(row(
+        "engine_impl_pallas", t_pallas,
+        f"n={kn};d={kd};us_per_row={t_pallas / kn * 1e6:.3f};"
+        f"interpret={interpret}",
+    ))
+
+    bound = roofline.igd_fold_bound_s(kn, kd)
+    best = min(t_xla, t_pallas)
+    rows.append(row(
+        "engine_roofline_fraction", best,
+        f"bound_us={bound * 1e6:.1f};fraction={bound / best:.2e};"
+        f"backend={jax.default_backend()}",
+    ))
+
     # planner vs forced-clustered on the CA-TX pathology
     catx = ordering.make_catx_dataset(n // 2)
     qc = engine.AnalyticsQuery(

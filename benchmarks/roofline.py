@@ -95,6 +95,19 @@ def table(path: str = DEFAULT_PATH, mesh: str = "16x16") -> str:
     return "\n".join(rows)
 
 
+def igd_fold_bound_s(n: int, d: int) -> float:
+    """Roofline lower bound (seconds) for ONE epoch of the fused IGD
+    fold over an [n, d] f32 slab: ~4nd flops (the w·x dot plus the axpy
+    model update, 2nd each) against PEAK_FLOPS, ~4nd bytes (one f32
+    read of x; w and y stay resident) against HBM_BW — whichever wall
+    binds. benchmarks/engine_bench.py holds the measured kernel wall
+    against this bound as engine_roofline_fraction."""
+    flops = 4.0 * n * d
+    byte_traffic = 4.0 * n * d
+    terms = hlo.roofline_terms(flops, byte_traffic, 0.0)
+    return max(terms.values())
+
+
 def run(quick: bool = True):
     from benchmarks.common import row
 

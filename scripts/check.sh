@@ -16,10 +16,19 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== timer lint (raw perf_counter stays out of the library) =="
 python scripts/lint_timers.py
 
-echo "== tier-1 tests =="
-python -m pytest -x -q
+echo "== tier-1 tests (per-file subprocesses) =="
+# One pytest process per file: a jaxlib native segfault intermittently
+# kills whole-suite runs mid-flight with no Python traceback. Per-file
+# isolation contains the blast radius to one file's report and makes
+# the culprit file obvious from the last header printed.
+for f in tests/test_*.py; do
+  echo "-- $f"
+  python -m pytest -x -q "$f"
+done
 
 if [[ "${1:-}" != "--fast" ]]; then
+  echo "== kernel smoke (forced implementation=pallas_fused, EXPLAIN goldens) =="
+  python scripts/kernel_smoke.py
   echo "== engine smoke benchmark =="
   python -m benchmarks.run --only engine --json .
   echo "== serve smoke benchmark =="

@@ -58,7 +58,7 @@ print("disabled path: zero spans recorded")
 # -- EXPLAIN ANALYZE: per-axis predicted vs measured ------------------------
 rep = eng.explain_analyze(q(seed=2, epochs=4))
 assert [r.axis for r in rep.rows] == [
-    "ordering", "parallelism", "batching", "source",
+    "ordering", "parallelism", "batching", "source", "implementation",
 ]
 assert rep.epochs_run == 4 and rep.measured_total_s > 0
 assert rep.attribution is not None, "EXPLAIN ANALYZE lost attribution"

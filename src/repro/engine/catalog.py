@@ -61,6 +61,12 @@ class TaskSpec:
     # quality penalty at k<=4 — the stratified DSGD schedule that fixes
     # this properly is a ROADMAP item).
     nonconvex: bool = False
+    # Loss name in the fused-IGD Pallas kernel's dispatch table
+    # (kernels/igd_fused: "lr" | "svm" | "lsq"), for techniques whose
+    # transition is exactly margin -> scale -> axpy on a dense (x, y)
+    # row. Unset means the implementation axis stays at xla_fold for
+    # this technique (structured models, sparse rows, custom prox).
+    kernel_loss: Optional[str] = None
 
     def make_task(self, **task_args):
         return self.factory(**task_args)
@@ -76,6 +82,7 @@ def register_task(
     prox: Callable[[Any], Callable] = _no_prox,
     derive_args: Optional[Callable[[dict, int], dict]] = None,
     nonconvex: bool = False,
+    kernel_loss: Optional[str] = None,
 ):
     """Class decorator registering a ``Task`` under ``name``.
 
@@ -85,14 +92,17 @@ def register_task(
     from the live table when the user left them unset (default: none).
     ``nonconvex``: the objective is non-convex — the planner limits the
     sharded plan axis for it (model averaging is unsafe at high shard
-    counts; default: convex)."""
+    counts; default: convex).
+    ``kernel_loss``: fused-IGD kernel loss name ("lr"/"svm"/"lsq") when
+    the transition matches the kernel's margin/scale/axpy shape (default:
+    none — implementation axis stays xla_fold)."""
     step = step_size or (lambda n: igd.diminishing(0.1, decay=max(n, 1)))
 
     def deco(cls):
         if name in _REGISTRY:
             raise ValueError(f"task {name!r} already registered")
         _REGISTRY[name] = TaskSpec(
-            name, cls, step, prox, derive_args, nonconvex
+            name, cls, step, prox, derive_args, nonconvex, kernel_loss
         )
         return cls
 
@@ -114,6 +124,18 @@ def unregister(name: str) -> None:
     _REGISTRY.pop(name, None)
 
 
+def kernel_loss_for(task) -> Optional[str]:
+    """Fused-kernel loss name for a task INSTANCE, or None.
+
+    Looks the instance's exact class up in the registry (subclasses
+    don't inherit eligibility — an override of example_grad would
+    silently diverge from the kernel's hard-coded gradient)."""
+    for spec in _REGISTRY.values():
+        if type(task) is spec.factory:
+            return spec.kernel_loss
+    return None
+
+
 # ---------------------------------------------------------------------------
 # Built-in techniques (paper Fig. 1B): every repro.tasks technique with the
 # hyperparameter defaults the benchmarks use (configs/paper_tasks.py).
@@ -123,17 +145,20 @@ register_task(
     "logreg",
     step_size=lambda n: igd.diminishing(0.5, decay=max(n, 1)),
     prox=_l1_from_mu,
+    kernel_loss="lr",
 )(tasks_lib.LogisticRegression)
 
 register_task(
     "svm",
     step_size=lambda n: igd.diminishing(0.2, decay=max(n, 1)),
     prox=_l1_from_mu,
+    kernel_loss="svm",
 )(tasks_lib.SVM)
 
 register_task(
     "least_squares",
     step_size=lambda n: igd.diminishing(0.1, decay=max(n, 1)),
+    kernel_loss="lsq",
 )(tasks_lib.LeastSquares)
 
 register_task(

@@ -247,14 +247,24 @@ class Engine:
         comps, _ = planner_lib.cost_components(
             plan, query, report.calibration, float(max(res.epochs, 1)),
         )
+        # serial singleton plans carry their lane-body compute on the
+        # implementation axis (cost_components splits the same total, it
+        # doesn't double-count); every other scheme keeps the epoch fold
+        # wall under parallelism
+        impl_axis = (
+            plan.parallelism != "sharded" and plan.scheme == "serial"
+        )
         rows = (
             obs.AxisCost(
                 "ordering", comps["ordering"], res.shuffle_seconds,
                 "shuffle/placement wall (EngineResult.shuffle_seconds)",
             ),
             obs.AxisCost(
-                "parallelism", comps["parallelism"], res.gradient_seconds,
-                "epoch fold wall (EngineResult.gradient_seconds)",
+                "parallelism", comps["parallelism"],
+                0.0 if impl_axis else res.gradient_seconds,
+                "lane body measured on the implementation axis"
+                if impl_axis
+                else "epoch fold wall (EngineResult.gradient_seconds)",
             ),
             obs.AxisCost(
                 "batching", 0.0, 0.0,
@@ -264,6 +274,14 @@ class Engine:
             obs.AxisCost(
                 "source", comps["source"], materialize_s,
                 "engine.materialize span (Table.resolve)",
+            ),
+            obs.AxisCost(
+                "implementation", comps.get("implementation", 0.0),
+                res.gradient_seconds if impl_axis else 0.0,
+                f"epoch fold wall of the {plan.implementation} lane body "
+                "(EngineResult.gradient_seconds)"
+                if impl_axis
+                else "lane body measured on the parallelism axis",
             ),
         )
         analysis = obs.DriftReport(
@@ -389,6 +407,7 @@ def _execute(
     grad_s = 0.0
     converged = False
     epoch = 0
+    kernel_impl = program_lib.plan_implementation(plan)
     for epoch in range(1, query.epochs + 1):
         with obs.span("epoch", index=epoch):
             t0 = time.perf_counter()
@@ -405,6 +424,13 @@ def _execute(
                 )
                 # swap: the memory worker cycles last epoch's reservoir
                 carry = (state, buf_b, buf_a, jnp.bool_(True))
+            elif kernel_impl != "xla_fold":
+                # the kernel wall gets its own span so drift/SLO and
+                # attribution see the implementation axis, not just a
+                # generic epoch
+                with obs.span("engine.kernel", implementation=kernel_impl):
+                    state = compiled.epoch_fn(state, examples, sub)
+                    jax.block_until_ready(state)
             else:
                 state = compiled.epoch_fn(state, examples, sub)
             jax.block_until_ready(state)
@@ -413,6 +439,8 @@ def _execute(
         grad_s += t2 - t1
         obs.metrics.observe("engine.epoch.shuffle_s", t1 - t0)
         obs.metrics.observe("engine.epoch.grad_s", t2 - t1)
+        if kernel_impl != "xla_fold":
+            obs.metrics.observe("engine.kernel_us_per_epoch", (t2 - t1) * 1e6)
         # A stop rule needs the per-epoch objective; without one, a single
         # evaluation after the last epoch suffices (full_loss scans the
         # whole table — not free on the serving path).

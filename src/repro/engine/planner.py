@@ -27,7 +27,10 @@ import jax
 import numpy as np
 
 from repro.engine import probes, table as table_lib
-from repro.engine.program import canonical_ordering
+from repro.engine.program import (
+    IMPLEMENTATIONS,
+    canonical_ordering,
+)
 from repro.engine.query import AnalyticsQuery
 
 
@@ -84,10 +87,16 @@ class Plan:
     # the planner picks it for clustered serial singleton plans over a
     # stored table, where it avoids the materialization entirely.
     source: str = "memory"  # memory | table
+    # -- the implementation axis (repro.kernels.igd_fused) -----------------
+    # xla_fold: the generic uda.fold scan. pallas_fused: the fused-IGD
+    # kernel's per-tuple lane (probe-priced against the scan for
+    # kernel-eligible serial plans). pallas_minibatch: one mean-gradient
+    # step per tile — different algorithm semantics, hint-only.
+    implementation: str = "xla_fold"
 
     def axes(self, batch: str = "1") -> str:
         """The composed-axes line (EXPLAIN's ``why``): one rendering of
-        the EpochProgram IR's four axes for this plan."""
+        the EpochProgram IR's five axes for this plan."""
         if self.parallelism == "sharded":
             par = (
                 f"sharded(k={self.num_shards}, H={self.merge_period}, "
@@ -97,7 +106,8 @@ class Plan:
             par = f"singleton/{self.scheme}"
         return (
             f"ordering={self.ordering} × parallelism={par} × "
-            f"batch={batch} × source={self.source}"
+            f"batch={batch} × source={self.source} × "
+            f"implementation={self.implementation}"
         )
 
     def describe(self) -> str:
@@ -125,7 +135,11 @@ class Plan:
                 f"{self.mrs_ratio} memory steps/tuple)"
             )
         src = " · source=table stream" if self.source == "table" else ""
-        return f"ordering={self.ordering} · {ex}{src}"
+        impl = (
+            f" · impl={self.implementation} (fused-IGD kernel)"
+            if self.implementation != "xla_fold" else ""
+        )
+        return f"ordering={self.ordering} · {ex}{src}{impl}"
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -310,17 +324,29 @@ def cost_components(
     note: str = "",
 ) -> Tuple[dict, str]:
     """The cost model's arithmetic, decomposed along the EpochProgram
-    axes it prices: ``{"ordering": s, "parallelism": s, "source": s}``
-    whose sum is exactly :func:`program_cost`'s total. EXPLAIN ANALYZE
-    (``Engine.explain_analyze``) re-evaluates these at the epoch count
-    a run actually executed to put predicted next to measured per axis
-    — which is why this is a separate function and not three locals
-    inside ``program_cost``. Returns ``(components, note)`` (the note
-    gains the mesh-probe provenance for sharded plans)."""
+    axes it prices: ``{"ordering": s, "parallelism": s, "source": s,
+    "implementation": s}`` whose sum is exactly :func:`program_cost`'s
+    total. EXPLAIN ANALYZE (``Engine.explain_analyze``) re-evaluates
+    these at the epoch count a run actually executed to put predicted
+    next to measured per axis — which is why this is a separate
+    function and not four locals inside ``program_cost``. Returns
+    ``(components, note)`` (the note gains the mesh-probe provenance
+    for sharded plans and the measured us/epoch of every probed lane
+    implementation for serial singleton plans).
+
+    The implementation component carries the serial singleton lane
+    body's compute, priced at the probed rate of the chosen lowering
+    (``cal.impl_per_row`` for pallas_*, ``cal.fold_per_row`` for
+    xla_fold); parallelism is 0 there — the axes split the same total,
+    they don't double-count it. Every other scheme/parallelism keeps
+    its compute under parallelism (their lane body is defined by the
+    scheme) with implementation = 0."""
     n = query.n_examples
     fold_row = cal.fold_per_row.get(plan.unroll) or min(
         cal.fold_per_row.values()
     )
+    impl = getattr(plan, "implementation", "xla_fold")
+    impl_rates = getattr(cal, "impl_per_row", {})
 
     # -- ordering axis: the cost of imposing the scan order --------------
     if plan.parallelism == "sharded":
@@ -370,7 +396,7 @@ def cost_components(
             probe_note = "sharded without a mesh probe: modeled at serial cost"
             note = f"{note}; {probe_note}" if note else probe_note
     elif plan.scheme == "serial":
-        parallelism = fold_row * n * est_epochs
+        parallelism = 0.0  # the lane body is priced on the impl axis below
     elif plan.scheme == "segmented":
         # measured vmap'd segmented fold (interpolated off the probed
         # point), not the old min(k, device_count) claim
@@ -382,8 +408,31 @@ def cost_components(
     else:  # mrs: 1 I/O step + ratio memory steps per streamed tuple
         parallelism = fold_row * n * (1 + plan.mrs_ratio) * est_epochs
 
+    # -- implementation axis: the serial singleton lane body --------------
+    implementation = 0.0
+    if plan.parallelism != "sharded" and plan.scheme == "serial":
+        impl_row = (
+            impl_rates.get(impl, fold_row) if impl != "xla_fold" else fold_row
+        )
+        implementation = impl_row * n * est_epochs
+        if impl_rates:
+            # the probe-derived choice, shown in EXPLAIN: measured
+            # us/epoch for every lane lowering probed on this hardware
+            rates = {"xla_fold": fold_row, **impl_rates}
+            probed = ", ".join(
+                f"{name} {rate * n * 1e6:.0f} us/epoch"
+                for name, rate in rates.items()
+            )
+            impl_note = f"impl-probed: {probed}"
+            note = f"{note}; {impl_note}" if note else impl_note
+
     return (
-        {"ordering": ordering, "parallelism": parallelism, "source": source},
+        {
+            "ordering": ordering,
+            "parallelism": parallelism,
+            "source": source,
+            "implementation": implementation,
+        },
         note,
     )
 
@@ -399,8 +448,8 @@ def program_cost(
 ) -> Candidate:
     """THE cost model: one function costs every point of the
     EpochProgram cross-product — ordering × scheme × parallelism ×
-    source, at any fused batch width — from the same measured
-    constants. (The executor, the sharded subsystem and the serving
+    source × implementation, at any fused batch width — from the same
+    measured constants. (The executor, the sharded subsystem and the serving
     front-end used to carry three special-cased models; they now all
     read this one.) ``batch > 1`` amortizes the one-time costs (the
     materialized shuffle / table read) over the fused lanes; the
@@ -423,7 +472,10 @@ def program_cost(
     comps, note = cost_components(
         plan, query, cal, est_epochs, batch=batch, note=note
     )
-    cost = comps["ordering"] + comps["source"] + comps["parallelism"]
+    cost = (
+        comps["ordering"] + comps["source"] + comps["parallelism"]
+        + comps["implementation"]
+    )
     return Candidate(plan, cost, est_epochs, note)
 
 
@@ -535,6 +587,27 @@ def enumerate_plans(query: AnalyticsQuery, unroll: int, cal=None) -> List[Plan]:
             f"unknown parallelism hint {hints['parallelism']!r}; "
             f"valid: {PARALLELISMS}"
         )
+    impl_hint = hints.get("implementation")
+    if impl_hint is not None and impl_hint not in IMPLEMENTATIONS:
+        raise ValueError(
+            f"unknown implementation hint {impl_hint!r}; "
+            f"valid: {IMPLEMENTATIONS}"
+        )
+    if impl_hint not in (None, "xla_fold"):
+        if hints.get("scheme") not in (None, "serial"):
+            raise ValueError(
+                f"implementation={impl_hint!r} lowers the serial lane "
+                "body (each lane streams the fused-IGD kernel); "
+                f"conflicting scheme hint {hints['scheme']!r}"
+            )
+        hints["scheme"] = "serial"
+        if cal is not None and not getattr(cal, "impl_per_row", {}):
+            raise ValueError(
+                f"implementation={impl_hint!r} forced for a query whose "
+                "aggregate is not kernel-eligible (catalog kernel_loss + "
+                "identity prox + dense (x, y) rows — see "
+                "program.kernel_eligibility)"
+            )
     if hints.get("parallelism") == "sharded" and hints.get("scheme") not in (
         None, "serial",
     ):
@@ -615,6 +688,26 @@ def enumerate_plans(query: AnalyticsQuery, unroll: int, cal=None) -> List[Plan]:
                 )
         elif hints.get("source") == "memory":
             plans = [dataclasses.replace(p, source="memory") for p in plans]
+    # -- the implementation axis: lane-body lowering ----------------------
+    if impl_hint not in (None, "xla_fold"):
+        # forced: every admitted plan is serial (validated above), so the
+        # kernel lowering applies across singleton, fused and sharded
+        plans = [
+            dataclasses.replace(p, implementation=impl_hint) for p in plans
+        ]
+    elif impl_hint is None and cal is not None and getattr(
+        cal, "impl_per_row", {}
+    ).get("pallas_fused") is not None:
+        # auto: enumerate the kernel lane next to the scan for serial
+        # singleton plans — the probe-derived choice falls out of the
+        # ranking. pallas_minibatch is never auto-chosen (one averaged
+        # step per tile is a different algorithm, not a faster identical
+        # one) and sharded plans keep their mesh-probed xla lanes.
+        plans.extend([
+            dataclasses.replace(p, implementation="pallas_fused")
+            for p in plans
+            if p.scheme == "serial" and p.parallelism == "singleton"
+        ])
     return list(dict.fromkeys(plans))  # Plan is frozen/hashable
 
 

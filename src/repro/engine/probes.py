@@ -3,7 +3,9 @@
 The planner's constants are MEASURED, not guessed: on first contact with
 a (task, table-signature) pair the engine times, on a small probe slab,
 (a) a random shuffle-gather, (b) one jitted serial fold per unroll
-candidate, and (c) one pairwise merge — the same median-of-k timing the
+candidate, (c) one pairwise merge, and (for kernel-eligible aggregates)
+the fused-IGD Pallas lanes of the implementation axis — the same
+median-of-k timing the
 benchmark harness uses (``time_call`` here is the benchmarks' timing
 primitive; ``benchmarks/common.py`` re-exports it). Probe cost is a few
 ms once per signature; results are cached on the engine.
@@ -80,6 +82,11 @@ class Calibration:
     # single-device mesh, where the sharded plan axis does not exist
     shard: Dict[int, ShardPoint] = dataclasses.field(default_factory=dict)
     device_count: int = 1
+    # measured fused-IGD kernel lanes (implementation -> seconds/row:
+    # "pallas_fused", "pallas_minibatch"), probed on the SAME slab as
+    # the xla fold so the implementation-axis ranking compares like with
+    # like; empty when the aggregate is not kernel-eligible
+    impl_per_row: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     def best_unroll(self) -> int:
         return min(self.fold_per_row, key=self.fold_per_row.get)
@@ -118,6 +125,7 @@ class Calibration:
             for k, p in d.get("shard", {}).items()
         }
         d.setdefault("device_count", 1)
+        d.setdefault("impl_per_row", {})
         return cls(**d)
 
 
@@ -198,7 +206,14 @@ def calibrate(agg, data, key: Tuple, *, unrolls=(1, 8)) -> Calibration:
         )
         seg_per_row[k_seg] = time_call(seg, state0, slab) / rows
 
-    # (e) sharded local-SGD blocks on the live device mesh (multi-device
+    # (e) the fused-IGD kernel lanes (the implementation axis), on the
+    # SAME slab as the xla fold: a rate amortized over a different row
+    # count would re-bias the exact ranking the axis exists to measure.
+    # Kernel-eligible aggregates only (catalog kernel_loss + identity
+    # prox + dense (x, y) rows) — everything else plans pure xla_fold.
+    impl_per_row = _probe_implementations(agg, slab, state0, rows)
+
+    # (f) sharded local-SGD blocks on the live device mesh (multi-device
     # only): the one probe that cannot be modeled, because placement
     # efficiency is a property of the machine (see BENCH_parallel.json:
     # on a 2-core host 2 devices beat 8; on a real pod 8 win).
@@ -215,6 +230,7 @@ def calibrate(agg, data, key: Tuple, *, unrolls=(1, 8)) -> Calibration:
         seg_per_row=seg_per_row,
         shard=shard,
         device_count=device_count,
+        impl_per_row=impl_per_row,
     )
     _CACHE[key] = cal
     _span.__exit__(None, None, None)
@@ -222,6 +238,40 @@ def calibrate(agg, data, key: Tuple, *, unrolls=(1, 8)) -> Calibration:
         "probes.calibrate_s", time.perf_counter() - _t_calibrate
     )
     return cal
+
+
+def _probe_implementations(agg, slab, state0, rows: int) -> Dict[str, float]:
+    """Time the fused-IGD kernel lanes (seconds/row) for the
+    implementation axis. Empty dict when the aggregate is not
+    kernel-eligible or the slab is not dense (x, y) rows — the planner
+    then never enumerates a pallas_* candidate."""
+    import functools
+
+    from repro.engine import program as program_lib
+
+    loss, _why = program_lib.kernel_eligibility(agg.task, agg)
+    if (
+        loss is None
+        or not isinstance(slab, dict)
+        or "x" not in slab or "y" not in slab
+        or getattr(slab["x"], "ndim", 0) != 2
+    ):
+        return {}
+    from repro.kernels.igd_fused import ops as igd_ops
+
+    interpret = igd_ops.default_interpret()
+    # the sequential schedule's exact per-row alphas, like the kernel lane
+    alphas = agg.step_size(state0.step + jnp.arange(rows))
+    out = {}
+    for name, op in (
+        ("pallas_fused", igd_ops.igd_fold),
+        ("pallas_minibatch", igd_ops.igd_fold_minibatch),
+    ):
+        fn = functools.partial(op, loss=loss, interpret=interpret)
+        out[name] = time_call(
+            fn, slab["x"], slab["y"], alphas, state0.model
+        ) / rows
+    return out
 
 
 def _min_of(fn, *args, iters: int = 5) -> float:

@@ -33,6 +33,15 @@ The axes
 * **data source** — ``memory`` (one resident pytree) or ``table`` (a
   stored-table chunk stream via the duck-typed ``Table`` protocol —
   see ``repro.engine.table``). Carried by ``Plan.source``.
+* **implementation** — ``xla_fold`` (the generic ``uda.fold`` scan) or
+  ``pallas_fused``/``pallas_minibatch`` (the fused-IGD Pallas kernel,
+  ``repro.kernels.igd_fused``: model hot in VMEM while example tiles
+  stream past — the paper's Bismarck inner loop as a real kernel).
+  Serial lane bodies only; eligibility is a catalog property
+  (``TaskSpec.kernel_loss`` + identity prox — see
+  :func:`kernel_eligibility`). The planner prices it from micro-probes
+  (``probes.Calibration.impl_per_row``). Carried by
+  ``Plan.implementation``.
 
 RNG discipline
 ==============
@@ -90,9 +99,58 @@ SHARD_MODES = {
     "shuffle_always": "perm_epoch",
 }
 
+# The implementation axis: how a serial lane body is lowered.
+#   xla_fold        — the generic unified-aggregate scan (uda.fold)
+#   pallas_fused    — kernels/igd_fused per-tuple IGD (ref.py oracle:
+#                     bit-order-identical to the scan, fp32 tolerance)
+#   pallas_minibatch— one mean-gradient step per 256-row tile: a
+#                     DIFFERENT algorithm (hint-only; never auto-chosen)
+IMPLEMENTATIONS = ("xla_fold", "pallas_fused", "pallas_minibatch")
+PALLAS_IMPLEMENTATIONS = ("pallas_fused", "pallas_minibatch")
+
 
 def canonical_ordering(name: str) -> str:
     return ORDERING_ALIASES.get(name, name)
+
+
+def plan_implementation(plan) -> str:
+    """The plan's lane-body lowering (duck-typed: pre-axis plan objects
+    read as xla_fold)."""
+    return getattr(plan, "implementation", "xla_fold")
+
+
+def kernel_eligibility(task, agg) -> Tuple[Optional[str], str]:
+    """(kernel loss name, "") when the aggregate can lower through the
+    fused-IGD kernel, else (None, reason). Eligibility is a catalog
+    property: the task's exact class must be registered with a
+    ``kernel_loss`` (lr/svm/lsq) AND the aggregate must carry the
+    identity prox — the kernel's transition has no prox hook, so an L1
+    ball or simplex projection would silently be skipped."""
+    from repro.core import igd as igd_lib
+    from repro.engine import catalog
+
+    loss = catalog.kernel_loss_for(task)
+    if loss is None:
+        return None, (
+            f"task {type(task).__name__} has no kernel_loss in the catalog "
+            "(only dense lr/svm/lsq transitions match the kernel)"
+        )
+    if agg.prox is not igd_lib.identity_prox:
+        return None, (
+            "the fused kernel's transition has no prox hook; this "
+            "aggregate carries a non-identity prox"
+        )
+    return loss, ""
+
+
+def require_kernel_loss(task, agg, implementation: str) -> str:
+    loss, why = kernel_eligibility(task, agg)
+    if loss is None:
+        raise ValueError(
+            f"implementation={implementation!r} needs a kernel-eligible "
+            f"aggregate: {why}"
+        )
+    return loss
 
 
 # ---------------------------------------------------------------------------
@@ -213,7 +271,20 @@ def build_epoch_fn(task, agg, plan) -> Callable:
     """The chosen scheme's raw (unjitted) epoch function
     ``(state_or_carry, examples, rng) -> state_or_carry`` — the
     singleton lane body every other composition is built from."""
+    impl = plan_implementation(plan)
+    if impl not in IMPLEMENTATIONS:
+        raise ValueError(
+            f"unknown implementation {impl!r}; valid: {IMPLEMENTATIONS}"
+        )
+    if impl != "xla_fold" and plan.scheme != "serial":
+        raise ValueError(
+            f"implementation={impl!r} lowers the serial lane body; "
+            f"scheme={plan.scheme!r} has no kernel form (use "
+            "scheme='serial' or implementation='xla_fold')"
+        )
     if plan.scheme == "serial":
+        if impl != "xla_fold":
+            return _kernel_lane_for(task, agg, impl, with_rng=True)
         return lambda s, ex, rng: uda_lib.fold(agg, s, ex, unroll=plan.unroll)
     if plan.scheme == "segmented":
         return lambda s, ex, rng: uda_lib.segmented_fold(
@@ -265,10 +336,19 @@ def build_chunk_epoch_fn(task, agg, plan, counter) -> Callable:
             f"fold; got scheme={plan.scheme!r}, ordering={plan.ordering!r} "
             "(the planner materializes for every other combination)"
         )
-    fold_chunk = counted_jit(
-        lambda s, ex: uda_lib.fold(agg, s, ex, unroll=plan.unroll),
-        counter, donate_argnums=(0,),
-    )
+    impl = plan_implementation(plan)
+    if impl != "xla_fold":
+        # the kernel folds each chunk with carried state: alphas continue
+        # from state.step, so chunk boundaries stay invisible exactly as
+        # they are for the scan
+        fold_chunk = counted_jit(
+            _kernel_lane_for(task, agg, impl), counter, donate_argnums=(0,),
+        )
+    else:
+        fold_chunk = counted_jit(
+            lambda s, ex: uda_lib.fold(agg, s, ex, unroll=plan.unroll),
+            counter, donate_argnums=(0,),
+        )
 
     def epoch(state, table, rng):
         del rng  # the stored order consumes no randomness
@@ -288,6 +368,66 @@ def permuted_lane(agg, unroll: int):
     def lane(state, data, perm):
         return uda_lib.gather_fold(agg, state, data, perm, unroll=unroll)
 
+    return lane
+
+
+# ---------------------------------------------------------------------------
+# kernel lane bodies (the implementation axis's pallas_* lowerings)
+# ---------------------------------------------------------------------------
+
+
+def kernel_lane_fold(agg, loss: str, *, minibatch: bool = False,
+                     interpret: Optional[bool] = None):
+    """The serial lane body lowered through the fused-IGD Pallas kernel:
+    ``(state, ex) -> state`` over a dense ``{"x": [n, d], "y": [n]}``
+    epoch stream, advancing step/weight exactly like ``uda.fold`` (one
+    per example). The per-example step sizes are the sequential
+    schedule's exact values — transition i reads ``step_size(step0 + i)``
+    and ``StepSize`` is elementwise over the step vector, so the kernel
+    sees the same alphas the scan would have computed one at a time.
+    ``interpret=None`` picks per backend (interpret on CPU, compiled on
+    TPU — ``igd_fused.ops.default_interpret``)."""
+    from repro.kernels.igd_fused import ops as igd_ops
+
+    if interpret is None:
+        interpret = igd_ops.default_interpret()
+    op = igd_ops.igd_fold_minibatch if minibatch else igd_ops.igd_fold
+
+    def lane(state, ex):
+        x, y = ex["x"], ex["y"]
+        n = x.shape[0]
+        alphas = agg.step_size(state.step + jnp.arange(n))
+        model = op(x, y, alphas, state.model, loss=loss, interpret=interpret)
+        return uda_lib.IGDState(model, state.step + n, state.weight + n)
+
+    return lane
+
+
+def kernel_permuted_lane(agg, loss: str, *, minibatch: bool = False,
+                         interpret: Optional[bool] = None):
+    """The kernel lane behind a permutation: the kernel streams example
+    tiles in array order, so the permutation is applied as one gather up
+    front (same rows, same order, same floats as ``permuted_lane``'s
+    in-scan gather — the kernel trades the per-step gather for a
+    materialized permuted view, which is the layout it wants anyway)."""
+    lane = kernel_lane_fold(agg, loss, minibatch=minibatch,
+                            interpret=interpret)
+
+    def permuted(state, data, perm):
+        return lane(state, _take(data, perm))
+
+    return permuted
+
+
+def _kernel_lane_for(task, agg, implementation: str,
+                     with_rng: bool = False):
+    """Build the lane body for a pallas_* implementation (validated)."""
+    loss = require_kernel_loss(task, agg, implementation)
+    lane = kernel_lane_fold(
+        agg, loss, minibatch=implementation == "pallas_minibatch"
+    )
+    if with_rng:
+        return lambda s, ex, rng: lane(s, ex)
     return lane
 
 
@@ -340,6 +480,8 @@ def build_shard_block(
     n_rows: int,
     unroll: int = 8,
     batch: int = 0,
+    implementation: str = "xla_fold",
+    kernel_loss: Optional[str] = None,
 ) -> Callable:
     """One compiled merge-period block: ``block_len`` local epochs then
     one global merge, under ``shard_map`` over the ("shard",) mesh.
@@ -372,6 +514,11 @@ def build_shard_block(
     merge equal the merge the lane's own (shorter) singleton run would
     have performed. A homogeneous batch masks nothing and is
     bit-identical to the pre-mask fused path.
+
+    ``implementation``/``kernel_loss`` select the lane body's lowering
+    (the implementation axis): ``pallas_*`` swaps the per-lane fold for
+    the fused-IGD kernel — same alphas, same step/weight accounting, so
+    the block's merge tree and compensated schedule are untouched.
     """
     AXIS = dp.AXIS
     num_devices = mesh.devices.size
@@ -382,15 +529,26 @@ def build_shard_block(
     lanes = num_shards // num_devices
     rows_per_shard = n_rows // num_shards
     batched = batch > 0
-    if mode == "segments":
+    if mode not in ("segments", "perm_once", "perm_epoch"):
+        raise ValueError(f"unknown block mode {mode!r}")
+    if implementation != "xla_fold":
+        if kernel_loss is None:
+            raise ValueError(
+                f"implementation={implementation!r} shard blocks need the "
+                "kernel_loss resolved by the caller (require_kernel_loss)"
+            )
+        mb = implementation == "pallas_minibatch"
+        if mode == "segments":
+            lane = kernel_lane_fold(agg, kernel_loss, minibatch=mb)
+        else:
+            lane = kernel_permuted_lane(agg, kernel_loss, minibatch=mb)
+    elif mode == "segments":
         lane = _lane_fold(agg, unroll)
-    elif mode in ("perm_once", "perm_epoch"):
+    else:
         # the ONE gather-fold lane (shared with the fused serving
         # batches): same rows, same order, same floats as folding a
         # materialized permuted copy, without writing one per lane
         lane = permuted_lane(agg, unroll)
-    else:
-        raise ValueError(f"unknown block mode {mode!r}")
 
     def lane_start(state):
         # partial states carry only their own contribution to the merge
@@ -586,6 +744,14 @@ class ShardedRunner:
         self.agg_sharded = compensated_aggregate(agg, plan.num_shards)
         self.plan = plan
         self.trace_counter = trace_counter
+        # the implementation axis rides into every block this runner
+        # compiles; eligibility is resolved once (the compensated
+        # aggregate keeps the task and prox, only the schedule changes)
+        self.implementation = plan_implementation(plan)
+        self.kernel_loss = (
+            require_kernel_loss(task, self.agg_sharded, self.implementation)
+            if self.implementation != "xla_fold" else None
+        )
         self._blocks: Dict[Tuple, Callable] = {}
         # repeat queries over the same live table skip re-partitioning /
         # re-placing it on the mesh (leaf identity, like Engine._reports;
@@ -617,6 +783,8 @@ class ShardedRunner:
                     num_shards=self.plan.num_shards,
                     block_len=block_len, mode=mode, n_rows=n_rows,
                     unroll=self.plan.unroll, batch=batch,
+                    implementation=self.implementation,
+                    kernel_loss=self.kernel_loss,
                 ),
                 self.trace_counter,
             )
@@ -679,10 +847,15 @@ def _build_fused(task, agg, prog: EpochProgram, n: int,
         # (one for each ordering shuffle, one per executor epoch)
         # replicate the singleton path exactly.
         mode = "fused"
-        vlane = jax.vmap(
-            permuted_lane(agg, plan.unroll),
-            in_axes=(0, data_axis, 0),
-        )
+        impl = plan_implementation(plan)
+        if impl != "xla_fold":
+            lane_body = kernel_permuted_lane(
+                agg, require_kernel_loss(task, agg, impl),
+                minibatch=impl == "pallas_minibatch",
+            )
+        else:
+            lane_body = permuted_lane(agg, plan.unroll)
+        vlane = jax.vmap(lane_body, in_axes=(0, data_axis, 0))
         if ordering == "shuffle_once":
 
             def run(states, data, keys, budgets):
@@ -809,6 +982,16 @@ def _build_program(
 ) -> CompiledProgram:
     counter = counter if counter is not None else fresh_counter()
     plan = prog.plan
+    impl = plan_implementation(plan)
+    if impl not in IMPLEMENTATIONS:
+        raise ValueError(
+            f"unknown implementation {impl!r}; valid: {IMPLEMENTATIONS}"
+        )
+    if impl != "xla_fold" and plan.scheme != "serial":
+        raise ValueError(
+            f"implementation={impl!r} lowers the serial lane body; "
+            f"scheme={plan.scheme!r} has no kernel form"
+        )
     if prog.batch < 1:
         raise ValueError(f"batch must be >= 1, got {prog.batch}")
     if prog.batch == 1 and prog.epochs == 0:

@@ -80,7 +80,10 @@ from repro.engine.query import AnalyticsQuery
 # segmented/sharded cost tables (repro.engine.shard).
 # (The EpochProgram refactor added Plan.source and PlanReport.axes with
 # backward-compatible defaults — v2 entries still load.)
-FORMAT_VERSION = 2
+# v3: Plan grew the implementation axis (fused-IGD kernel lanes) and
+# Calibration grew impl_per_row; old entries would silently re-plan the
+# kernel choice from stale constants, so they are invalidated.
+FORMAT_VERSION = 3
 
 REJECT_QUEUE_FULL = "queue_full"
 REJECT_TASK_LIMIT = "task_limit"
@@ -570,10 +573,14 @@ class ServingEngine:
         if hit is not None:
             return hit
         _, task, agg = self.engine._aggregate_for(query)
-        if plan.parallelism != "sharded":
+        if (
+            plan.parallelism != "sharded"
+            and program_lib.plan_implementation(plan) == "xla_fold"
+        ):
             # the singleton plan's unroll was probed for a single fold;
             # the vmapped executable wants its own (measured, not
-            # guessed — probes.probe_batch_unroll)
+            # guessed — probes.probe_batch_unroll). Kernel lanes have no
+            # scan-unroll knob, so pallas_* plans skip the re-probe.
             plan = dataclasses.replace(
                 plan,
                 unroll=probes.probe_batch_unroll(

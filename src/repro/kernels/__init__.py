@@ -5,7 +5,10 @@ tiling), ops.py (jit'd public wrapper with an interpret-mode switch for
 CPU) and ref.py (pure-jnp oracle used by the allclose test sweeps).
 
   igd_fused/   the paper's hot loop — per-tuple IGD transition with the
-               model held in VMEM across example tiles
+               model held in VMEM across example tiles; wired into the
+               engine as the EpochProgram ``implementation`` axis
+               (engine/program.py lowers eligible lane bodies onto it,
+               probe-priced against the XLA fold)
   attention/   blockwise causal flash attention (train/prefill)
   decode/      flash-decode over a KV cache with online softmax
 """

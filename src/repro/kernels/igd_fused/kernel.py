@@ -14,6 +14,13 @@ stream from the buffer pool. The TPU adaptation (DESIGN.md §5):
   MXU utilization (both have exact jnp oracles in ref.py).
 
 Losses: "lr" (logistic), "svm" (hinge), "lsq" (least squares).
+
+The engine reaches these kernels through the EpochProgram
+``implementation`` axis: ``engine/program.py`` lowers serial lane
+bodies onto ``ops.igd_fold`` / ``ops.igd_fold_minibatch`` for
+kernel-eligible tasks (``catalog.kernel_loss_for``), and the planner
+prices the choice from per-implementation micro-probes
+(``Calibration.impl_per_row``) — see ENGINE.md.
 """
 
 from __future__ import annotations

@@ -1,5 +1,19 @@
-"""Public jit'd wrappers for the fused IGD kernels. On CPU (no TPU) the
-kernels run in interpret mode; pass interpret=False on real hardware."""
+"""Public jit'd wrappers for the fused IGD kernels.
+
+These are the lane bodies behind the EpochProgram compiler's
+``implementation`` axis (``repro.engine.program.build_program`` lowers
+serial lane bodies of kernel-eligible plans through ``igd_fold`` /
+``igd_fold_minibatch``; the planner prices them against the XLA fold
+from micro-probes — see ``repro.engine.probes``). On CPU (no TPU) the
+kernels run in interpret mode; on real hardware they compile
+(``default_interpret`` picks per backend, which is what the engine
+passes).
+
+Inputs of any (N, D) are padded to the kernel's (TILE, 128) tiling by
+``_pad``; padded rows carry ``alpha = 0`` so the transition is a no-op
+for every loss (including ``lsq``, where the pad's margin is w·x with
+y = 0 — the step is ``alpha * (margin - y) * x`` and the zero alpha
+kills it; pinned by tests/test_kernels.py)."""
 
 from __future__ import annotations
 
@@ -10,6 +24,11 @@ import jax.numpy as jnp
 
 from repro.kernels.igd_fused import kernel as K
 from repro.kernels.igd_fused import ref as R
+
+
+def default_interpret() -> bool:
+    """Interpret-mode on CPU, compiled on real TPU hardware."""
+    return jax.default_backend() != "tpu"
 
 
 def _pad(x, y, alpha, w0):
@@ -39,8 +58,17 @@ def igd_fold(x, y, alpha, w0, *, loss="lr", interpret=True, use_kernel=True):
 @functools.partial(jax.jit, static_argnames=("loss", "interpret", "use_kernel"))
 def igd_fold_minibatch(x, y, alpha, w0, *, loss="lr", interpret=True,
                        use_kernel=True):
+    """One mean-gradient step per TILE rows (margins via one MXU matvec).
+
+    Ragged tails are defined BY the padding: the last tile's mean is
+    taken over the full TILE with the pad contributing zero gradient, so
+    the escape hatch must see the same padded stream as the kernel —
+    the unpadded ref would reshape-fail on N % TILE != 0 and, worse,
+    divide the tail by a different count."""
     if not use_kernel:
-        return R.igd_fold_minibatch_ref(x, y, alpha, w0, loss=loss, tile=K.TILE)
+        xp, yp, ap, wp, d = _pad(x, y, alpha, w0)
+        out = R.igd_fold_minibatch_ref(xp, yp, ap, wp, loss=loss, tile=K.TILE)
+        return out[:d]
     xp, yp, ap, wp, d = _pad(x, y, alpha, w0)
     out = K.igd_fold_minibatch(xp, yp, ap, wp, loss=loss, interpret=interpret)
     return out[:d]

@@ -47,6 +47,87 @@ def test_igd_minibatch_matches_ref(loss):
                                rtol=2e-4, atol=2e-5)
 
 
+def _igd_inputs(n, d, seed=3):
+    rng = jax.random.PRNGKey(seed)
+    x = jax.random.normal(rng, (n, d), jnp.float32) / jnp.sqrt(d)
+    y = jnp.sign(jax.random.normal(jax.random.fold_in(rng, 1), (n,)))
+    alpha = 0.1 / (1.0 + jnp.arange(n, dtype=jnp.float32) / n)
+    w0 = 0.01 * jax.random.normal(jax.random.fold_in(rng, 2), (d,))
+    return x, y, alpha, w0
+
+
+# the padding matrix: every ragged combination the tiler must absorb
+# (N % TILE != 0, D % 128 != 0, and both at once)
+_PAD_SHAPES = [(300, 72), (513, 200), (256, 130), (512, 128)]
+
+
+@pytest.mark.parametrize("loss", ["lr", "svm", "lsq"])
+@pytest.mark.parametrize("n,d", _PAD_SHAPES)
+def test_igd_fold_padding_matrix(loss, n, d):
+    """Parity matrix vs the jnp oracle across losses × padding shapes."""
+    x, y, alpha, w0 = _igd_inputs(n, d)
+    wk = igd_ops.igd_fold(x, y, alpha, w0, loss=loss)
+    wr = igd_ref.igd_fold_ref(x, y, alpha, w0, loss=loss)
+    assert wk.shape == (d,)
+    np.testing.assert_allclose(np.asarray(wk), np.asarray(wr),
+                               rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("loss", ["lr", "svm", "lsq"])
+@pytest.mark.parametrize("n,d", _PAD_SHAPES)
+def test_igd_pad_rows_are_bitwise_noops(loss, n, d):
+    """The regression the ragged tail relies on: _pad's rows carry
+    alpha=0, so the transition w - alpha*c*x leaves w untouched EXACTLY
+    (0.0 * anything-finite = 0.0; w - 0 = w bitwise), and the D padding
+    appends zero columns whose dot contribution is an exact +0.0. For
+    lsq in particular the pad's margin is w·x with y=0 — nonzero! — and
+    only the zero alpha kills the step. Pinned bit-equal, not allclose:
+    a future pad scheme that merely approximates the no-op must fail."""
+    x, y, alpha, w0 = _igd_inputs(n, d)
+    xp, yp, ap, wp, d_out = igd_ops._pad(x, y, alpha, w0)
+    assert d_out == d
+    assert xp.shape[0] % igd_kernel.TILE == 0 and xp.shape[1] % 128 == 0
+    ref_padded = igd_ref.igd_fold_ref(xp, yp, ap, wp, loss=loss)
+    ref_raw = igd_ref.igd_fold_ref(x, y, alpha, w0, loss=loss)
+    assert np.array_equal(np.asarray(ref_padded[:d]), np.asarray(ref_raw))
+    # and the padded tail of the model never moves off its zero init
+    assert np.array_equal(
+        np.asarray(ref_padded[d:]), np.zeros(xp.shape[1] - d, np.float32)
+    )
+
+
+@pytest.mark.parametrize("loss", ["lr", "svm", "lsq"])
+@pytest.mark.parametrize("n,d", _PAD_SHAPES)
+def test_igd_minibatch_padding_matrix(loss, n, d):
+    """Minibatch parity on ragged shapes. The tail tile's mean is taken
+    over the full TILE with zero-gradient pad rows (the padding DEFINES
+    the ragged semantics), so the oracle is the jnp minibatch ref over
+    the same padded stream — which is exactly what use_kernel=False
+    runs."""
+    x, y, alpha, w0 = _igd_inputs(n, d)
+    wk = igd_ops.igd_fold_minibatch(x, y, alpha, w0, loss=loss)
+    xp, yp, ap, wp, _ = igd_ops._pad(x, y, alpha, w0)
+    wr = igd_ref.igd_fold_minibatch_ref(xp, yp, ap, wp, loss=loss,
+                                        tile=igd_kernel.TILE)[:d]
+    assert wk.shape == (d,)
+    np.testing.assert_allclose(np.asarray(wk), np.asarray(wr),
+                               rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("op", [igd_ops.igd_fold, igd_ops.igd_fold_minibatch])
+def test_igd_escape_hatch_matches_kernel(op):
+    """use_kernel=False is the oracle path: it must accept the same
+    ragged shapes the kernel accepts (the minibatch hatch used to crash
+    on N % TILE != 0 by handing unpadded rows to the reshape-based ref)
+    and agree with the kernel within fold tolerance."""
+    x, y, alpha, w0 = _igd_inputs(300, 72)
+    wk = op(x, y, alpha, w0, loss="lsq", use_kernel=True)
+    wh = op(x, y, alpha, w0, loss="lsq", use_kernel=False)
+    assert wh.shape == (72,)
+    np.testing.assert_allclose(np.asarray(wk), np.asarray(wh),
+                               rtol=2e-4, atol=2e-5)
+
+
 @given(st.integers(0, 10_000))
 @settings(max_examples=10, deadline=None)
 def test_igd_fold_property_random_seeds(seed):

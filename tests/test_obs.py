@@ -264,7 +264,7 @@ def test_explain_analyze_reports_per_axis_drift():
     eng = engine.Engine()
     rep = eng.explain_analyze(_q(data, epochs=3))
     assert [r.axis for r in rep.rows] == [
-        "ordering", "parallelism", "batching", "source",
+        "ordering", "parallelism", "batching", "source", "implementation",
     ]
     assert rep.epochs_run == 3
     assert rep.measured_total_s > 0 and rep.predicted_total_s > 0
